@@ -1,0 +1,432 @@
+"""Benchmark harness: one function per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV lines and writes full JSON records to
+results/benchmarks/.  Ensemble sizes are scaled to a single-host CPU run
+(documented per entry); all qualitative paper claims (C1-C7, DESIGN.md §1)
+are asserted here and summarized in EXPERIMENTS.md.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only fig2,eq8] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+
+OUT = pathlib.Path("results/benchmarks")
+
+
+def _emit(name: str, us_per_call: float, derived: str, payload: dict):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    OUT.mkdir(parents=True, exist_ok=True)
+    payload = dict(payload, name=name, us_per_call=us_per_call,
+                   derived=derived)
+    (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2 — unconstrained utilization evolution reaches a nonzero steady state
+# ---------------------------------------------------------------------------
+
+
+def fig2_utilization_evolution(fast=False):
+    from repro.core import PDESConfig, ensemble
+    trials = 32 if fast else 64
+    rows = {}
+    t0 = time.time()
+    for L in (10, 100, 1000):
+        for nv in (1, 10, 100):
+            cfg = PDESConfig(L=L, n_v=nv)
+            ev = ensemble.width_evolution(cfg, n_steps=600 if fast else 1500,
+                                          n_trials=trials, seed=L + nv)
+            rows[f"L{L}_nv{nv}"] = {
+                "u_first": float(ev["u"][0]),
+                "u_steady": float(ev["u"][-200:].mean()),
+            }
+    # claims: u(0) = 1 (synchronized start), steady state > 0, grows with nv
+    assert all(abs(r["u_first"] - 1.0) < 1e-6 for r in rows.values())
+    assert all(r["u_steady"] > 0.1 for r in rows.values())
+    assert rows["L1000_nv100"]["u_steady"] > rows["L1000_nv1"]["u_steady"]
+    _emit("fig2_utilization_evolution", (time.time() - t0) * 1e6,
+          f"u_steady(L=1000,nv=1)={rows['L1000_nv1']['u_steady']:.4f}", rows)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (8) / Fig. 2 — u_inf = 24.6461(7)% via Krug-Meakin extrapolation  [C1]
+# ---------------------------------------------------------------------------
+
+
+def eq8_uinf_extrapolation(fast=False):
+    from repro.core import PDESConfig, ensemble, scaling, theory
+    Ls = [16, 32, 64, 128, 256] + ([] if fast else [512])
+    us, t0 = [], time.time()
+    for L in Ls:
+        ss = ensemble.steady_state(
+            PDESConfig(L=L, n_v=1), n_trials=32 if fast else 64, seed=L,
+            burn_in_steps=int(5 * L ** 1.5) + 500,
+            measure_steps=2000 if fast else 6000)
+        us.append(ss.utilization)
+    ex = scaling.krug_meakin_extrapolate(Ls, us, alpha=0.5)
+    err = abs(ex.u_inf - theory.U_INF_KPZ_NV1)
+    rec = {"Ls": Ls, "u_L": us, "u_inf": ex.u_inf,
+           "paper": theory.U_INF_KPZ_NV1, "abs_err": err,
+           "const": ex.coeffs["const"]}
+    assert err < 0.01, rec        # C1: within 1% absolute of 24.6461%
+    _emit("eq8_uinf_extrapolation", (time.time() - t0) * 1e6,
+          f"u_inf={ex.u_inf:.4f} (paper 0.2465, err {err:.4f})", rec)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 + Eqs. (6,7,9) — KPZ growth and roughness exponents            [C2,C3]
+# ---------------------------------------------------------------------------
+
+
+def fig4_kpz_exponents(fast=False):
+    """KPZ exponents at single-host-reachable scales.
+
+    The asymptotic KPZ values (beta = 1/3, alpha = 1/2) emerge slowly: at
+    L <= a few thousand the *effective* exponents sit below them and rise
+    monotonically with scale (well-known corrections to scaling; the paper's
+    own values come from L up to 1e4, t up to 1e6).  We therefore check
+    (a) the monotone approach, and (b) the correction-extrapolated values.
+    """
+    from repro.core import PDESConfig, ensemble, scaling
+    t0 = time.time()
+    # effective growth exponent over increasing time windows
+    L = 1024 if fast else 2048
+    ev = ensemble.width_evolution(PDESConfig(L=L, n_v=1),
+                                  n_steps=3000 if fast else 4000,
+                                  n_trials=16, seed=0)
+    # windows stay well inside the growth regime: the measured crossover is
+    # t_x ~ 1.5 L^{3/2} (≈12k steps at L=2048), and the local slope bends
+    # down within a factor ~3 of t_x.
+    windows = [(30, 120), (120, 600), (600, 3000)]
+    betas = [scaling.fit_power_law(ev["t"], ev["w2"], lo, hi)[0] / 2
+             for lo, hi in windows]
+    # effective roughness exponent from successive saturated-width pairs
+    Ls = [16, 32, 64, 128, 256]
+    sats = []
+    for Li in Ls:
+        ss = ensemble.steady_state(
+            PDESConfig(L=Li, n_v=1), n_trials=32, seed=Li,
+            burn_in_steps=int(8 * Li ** 1.5) + 1000,
+            measure_steps=1500 if fast else 3000)
+        sats.append(ss.w2)
+    alpha_pairs = [math.log(b / a) / math.log(2) / 2
+                   for a, b in zip(sats, sats[1:])]
+    # extrapolate alpha_eff against 1/sqrt(L): intercept ~ alpha_inf
+    x = np.array([1 / math.sqrt(math.sqrt(a * b))
+                  for a, b in zip(Ls, Ls[1:])])
+    A = np.stack([np.ones_like(x), x], 1)
+    alpha_inf = float(np.linalg.lstsq(A, np.array(alpha_pairs), rcond=None)[0][0])
+    # large-N_V initial growth is RD-like (beta ~ 1/2)               [C3]
+    ev_rd = ensemble.width_evolution(PDESConfig(L=256, n_v=100),
+                                     n_steps=400, n_trials=32, seed=7)
+    beta_rd, _ = scaling.growth_exponent(ev_rd["t"], ev_rd["w2"],
+                                         fit_lo_frac=0.02, fit_hi_frac=0.3)
+    rec = {"beta_eff_windows": betas, "alpha_eff_pairs": alpha_pairs,
+           "alpha_extrapolated": alpha_inf, "beta_early_nv100": beta_rd,
+           "w2_sat": dict(zip(map(str, Ls), sats))}
+    # C2: effective exponents rise toward the KPZ values
+    assert betas[-1] > betas[0] - 0.02 and 0.22 <= betas[-1] <= 0.45, rec
+    assert all(b >= a - 0.03 for a, b in zip(alpha_pairs, alpha_pairs[1:])), rec
+    assert 0.38 <= alpha_inf <= 0.62, rec
+    # C3: early growth at large N_V is RD-like, well above the KPZ beta
+    assert beta_rd > 0.4, rec
+    _emit("fig4_kpz_exponents", (time.time() - t0) * 1e6,
+          f"beta_eff={betas[-1]:.3f}->1/3, alpha_pairs "
+          f"{alpha_pairs[0]:.2f}->{alpha_pairs[-1]:.2f}, "
+          f"alpha_inf={alpha_inf:.2f} (KPZ 0.5), beta_rd={beta_rd:.2f}", rec)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 — constrained utilization vs system size; RD limit             [C5]
+# ---------------------------------------------------------------------------
+
+
+def fig5_util_vs_L(fast=False):
+    from repro.core import PDESConfig, ensemble
+    t0 = time.time()
+    Ls = [16, 32, 64, 128] + ([] if fast else [256])
+    out = {}
+    for delta in (10.0, 100.0):
+        for nv in (1, 10, 100, "rd"):
+            us = []
+            for L in Ls:
+                cfg = PDESConfig(L=L, n_v=1 if nv == "rd" else nv,
+                                 delta=delta, rd_mode=(nv == "rd"))
+                ss = ensemble.steady_state(cfg, n_trials=32, seed=L)
+                us.append(ss.utilization)
+            out[f"d{delta}_nv{nv}"] = dict(zip(map(str, Ls), us))
+    # C5: for fixed L, u grows with N_V toward the RD curve
+    for delta in (10.0, 100.0):
+        u1 = out[f"d{delta}_nv1"][str(Ls[-1])]
+        u100 = out[f"d{delta}_nv100"][str(Ls[-1])]
+        urd = out[f"d{delta}_nvrd"][str(Ls[-1])]
+        assert u1 < u100 <= urd + 0.03, (delta, u1, u100, urd)
+    _emit("fig5_util_vs_L", (time.time() - t0) * 1e6,
+          f"u(L=128,d=10): nv1={out['d10.0_nv1']['128']:.3f} "
+          f"nv100={out['d10.0_nv100']['128']:.3f} "
+          f"rd={out['d10.0_nvrd']['128']:.3f}", out)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 + Appendix — u_inf(N_V, Δ) surface vs fits A.1/A.2/Eq.(12)     [C6]
+# ---------------------------------------------------------------------------
+
+
+def fig6_uinf_surface(fast=False):
+    from repro.core import PDESConfig, ensemble, scaling, theory
+    t0 = time.time()
+    Ls = [64, 128, 256, 512] + ([] if fast else [1024, 2048])
+    grid = {}
+    for delta in (1.0, 10.0, 100.0):
+        for nv in (1, 10, 100, "rd"):
+            us = []
+            for L in Ls:
+                cfg = PDESConfig(L=L, n_v=1 if nv == "rd" else nv,
+                                 delta=delta, rd_mode=(nv == "rd"))
+                ss = ensemble.steady_state(
+                    cfg, n_trials=16, seed=L,
+                    burn_in_steps=None, measure_steps=1200)
+                us.append(ss.utilization)
+            ex = scaling.rational_extrapolate(Ls, us)
+            nv_eff = 1e8 if nv == "rd" else nv
+            pred = float(theory.u_composite(nv_eff, delta))
+            grid[f"d{delta}_nv{nv}"] = {
+                "u_inf": ex.u_inf, "paper_fit": pred,
+                "abs_err": abs(ex.u_inf - pred), "u_L": us}
+    errs = [v["abs_err"] for v in grid.values()]
+    rec = {"grid": grid, "max_abs_err": max(errs),
+           "mean_abs_err": float(np.mean(errs))}
+    # C6: paper fit (12) is ±5-10%; finite-L extrapolation adds its own error
+    assert rec["mean_abs_err"] < 0.08, rec["mean_abs_err"]
+    _emit("fig6_uinf_surface", (time.time() - t0) * 1e6,
+          f"mean|u_inf - fit|={rec['mean_abs_err']:.3f} "
+          f"max={rec['max_abs_err']:.3f}", rec)
+
+
+# ---------------------------------------------------------------------------
+# Figs. 7-9 — Δ-window bounds the width for any system size             [C4]
+# ---------------------------------------------------------------------------
+
+
+def fig9_width_saturation(fast=False):
+    from repro.core import PDESConfig, ensemble
+    t0 = time.time()
+    Ls = [32, 64, 128, 256] + ([] if fast else [512])
+    out = {}
+    for delta in (1.0, 5.0, 10.0, 100.0):
+        for nv in (1, 10):
+            ws, was = [], []
+            for L in Ls:
+                ss = ensemble.steady_state(
+                    PDESConfig(L=L, n_v=nv, delta=delta),
+                    n_trials=16, seed=L)
+                ws.append(ss.w)
+                was.append(ss.wa)
+            out[f"d{delta}_nv{nv}"] = {"w": ws, "wa": was}
+            # C4: width bounded by O(Δ) for every L ...
+            assert max(ws) <= delta + 4.0, (delta, nv, ws)
+            # ... and saturates to a Δ-ceiling: once the unconstrained KPZ
+            # width would exceed the window, w(L) flattens (<=12% change per
+            # L-doubling at the top end) instead of growing as sqrt(L).
+            if ws[-1] > 0.8 * delta:
+                assert abs(ws[-1] - ws[-2]) <= 0.12 * ws[-2] + 0.05, \
+                    (delta, nv, ws)
+            else:                         # far from the ceiling: bounded rise
+                assert ws[-1] <= ws[0] * math.sqrt(Ls[-1] / Ls[0]), \
+                    (delta, nv, ws)
+    # contrast: unconstrained width DOES grow with L (the paper's Fig. 4)
+    w_unc = [ensemble.steady_state(PDESConfig(L=L, n_v=1), n_trials=8,
+                                   seed=L).w for L in (32, 128)]
+    assert w_unc[1] > w_unc[0] * 1.3
+    rec = dict(out, Ls=Ls, w_unconstrained=w_unc)
+    _emit("fig9_width_saturation", (time.time() - t0) * 1e6,
+          f"w_sat(d=10,nv=1): {out['d10.0_nv1']['w'][0]:.2f}->"
+          f"{out['d10.0_nv1']['w'][-1]:.2f} over L={Ls[0]}->{Ls[-1]} "
+          f"(Δ-ceiling); unconstrained {w_unc[0]:.2f}->{w_unc[1]:.2f}", rec)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 10 — slow/fast simplex decomposition; double-peak transient      [C7]
+# ---------------------------------------------------------------------------
+
+
+def fig10_slow_fast(fast=False):
+    import jax
+    from repro.core import (PDESConfig, group_decomposition, horizon,
+                            recombine_w2, recombine_wa)
+    t0 = time.time()
+    cfg = PDESConfig(L=1000, n_v=1000, delta=10.0)
+    n_steps = 300 if fast else 500
+    state = horizon.init_state(cfg, 16)
+    key = jax.random.key(0)
+    series = {"f_slow": [], "wa_slow": [], "wa_fast": [], "wa": [], "u": []}
+    for t in range(n_steps):
+        state, stats = horizon.run(state, key, cfg, 1)
+        g = group_decomposition(state.tau)
+        series["f_slow"].append(float(np.asarray(g.f_slow).mean()))
+        series["wa_slow"].append(float(np.asarray(g.wa_slow).mean()))
+        series["wa_fast"].append(float(np.asarray(g.wa_fast).mean()))
+        series["wa"].append(float(np.asarray(stats.wa).mean()))
+        series["u"].append(float(np.asarray(stats.utilization).mean()))
+        # Eqs. (17)-(18) recombination identity holds at every step
+        w2 = np.asarray(recombine_w2(g))
+        wa = np.asarray(recombine_wa(g))
+        if t % 100 == 0:
+            dev = np.asarray(state.tau) - np.asarray(state.tau).mean(1)[:, None]
+            np.testing.assert_allclose(w2, (dev ** 2).mean(1), rtol=1e-4)
+            np.testing.assert_allclose(wa, np.abs(dev).mean(1), rtol=1e-4)
+    wa_f = np.array(series["wa_fast"])
+    peak_t = int(wa_f.argmax())
+    # C7: fast-group width peaks early then decays to a plateau; the slow
+    # fraction starts majority (~63% in the paper) and relaxes
+    rec = dict(series, peak_t=peak_t)
+    assert series["f_slow"][0] > 0.55
+    assert 1 <= peak_t < n_steps // 2
+    assert wa_f[-1] < wa_f[peak_t]
+    _emit("fig10_slow_fast", (time.time() - t0) * 1e6,
+          f"f_slow(0)={series['f_slow'][0]:.2f}, wa_fast peak at t={peak_t}, "
+          f"u_steady={np.mean(series['u'][-100:]):.3f}", rec)
+
+
+# ---------------------------------------------------------------------------
+# Kernel table — fused Pallas step vs pure-XLA step                     [B1,B2]
+# ---------------------------------------------------------------------------
+
+
+def bench_kernel_fused(fast=False):
+    import jax
+    from repro.core import PDESConfig, horizon
+    from repro.kernels import ops
+    t0 = time.time()
+    cfg = PDESConfig(L=4096, n_v=10, delta=10.0)
+    B, T = 8, 64
+    state = horizon.init_state(cfg, B)
+    key = jax.random.key(0)
+    # wall time of the XLA path (the kernels' correctness twin); Pallas
+    # interpret=True timing is not meaningful on CPU (documented).
+    run = lambda: jax.block_until_ready(horizon.run(state, key, cfg, T))
+    run()
+    _, us = _timed(run)
+    us_per_step = us / T
+    # derived: HBM bytes/PE/step — XLA path vs fused kernel vs K-fused kernel
+    # (analytic; see kernels/*.py docstrings)
+    xla_bytes = 7 * 4 + 8          # ~7 tau-sized round trips + bits read
+    fused_bytes = 2 * 4 + 8        # tau r/w + bits
+    kfused_bytes = 8 + 2 * 4 / 16  # bits + tau r/w amortized over K=16
+    rec = {"us_per_step_xla_cpu": us_per_step,
+           "bytes_per_pe_step": {"xla": xla_bytes, "fused": fused_bytes,
+                                 "fused_k16": kfused_bytes},
+           "reduction_fused": xla_bytes / fused_bytes,
+           "reduction_k16": xla_bytes / kfused_bytes}
+    _emit("bench_kernel_fused", us_per_step,
+          f"bytes/PE/step {xla_bytes}->{fused_bytes}->{kfused_bytes:.1f} "
+          f"(x{rec['reduction_k16']:.1f} at K=16)", rec)
+
+
+# ---------------------------------------------------------------------------
+# PDES comm table — exact vs comm-avoiding GVT (B3/B4/B5)
+# ---------------------------------------------------------------------------
+
+_COMM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, math
+    import jax
+    import numpy as np
+    from repro.core.horizon import PDESConfig
+    from repro.core import distributed as D
+    from repro.launch.hlo_cost import analyze_hlo
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = PDESConfig(L=4096, n_v=10, delta=100.0)
+    out = {}
+    for mode, K in [("exact", 16), ("commavoid", 4), ("commavoid", 16),
+                    ("commavoid", 64)]:
+        dist = D.DistConfig(ens_axes=("data",), ring_axis="model",
+                            mode=mode, k_chunk=K)
+        lowered = D.lower_sharded(cfg, mesh, n_trials=8, n_steps=64,
+                                  dist=dist)
+        c = analyze_hlo(lowered.compile().as_text())
+        # utilization cost of stale GVT, measured with the simulator itself
+        stale = None if mode == "exact" else K
+        _, st = D.run_reference(cfg, n_trials=8, n_steps=400, seed=1,
+                                stale_every=stale)
+        out[f"{mode}_K{K}"] = {
+            "coll_bytes_per_step": c.coll_bytes / 64,
+            "coll_msgs_per_step": c.coll_msgs / 64,
+            "utilization": float(np.asarray(st["u"])[200:].mean()),
+        }
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def bench_pdes_comm(fast=False):
+    t0 = time.time()
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", _COMM_SCRIPT],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    rec = json.loads(line[len("RESULT "):])
+    ex = rec["exact_K16"]
+    cv = rec["commavoid_K16"]
+    msgs_ratio = ex["coll_msgs_per_step"] / max(cv["coll_msgs_per_step"], 1e-9)
+    du = ex["utilization"] - cv["utilization"]
+    _emit("bench_pdes_comm", (time.time() - t0) * 1e6,
+          f"msgs/step {ex['coll_msgs_per_step']:.2f}->"
+          f"{cv['coll_msgs_per_step']:.2f} (x{msgs_ratio:.1f} fewer), "
+          f"utilization cost {du:+.4f} at K=16, Δ=100", rec)
+
+
+BENCHES = {
+    "fig2": fig2_utilization_evolution,
+    "eq8": eq8_uinf_extrapolation,
+    "fig4": fig4_kpz_exponents,
+    "fig5": fig5_util_vs_L,
+    "fig6": fig6_uinf_surface,
+    "fig9": fig9_width_saturation,
+    "fig10": fig10_slow_fast,
+    "kernel": bench_kernel_fused,
+    "pdes_comm": bench_pdes_comm,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = []
+    for n in names:
+        try:
+            BENCHES[n](fast=args.fast)
+        except AssertionError as e:  # report, keep going
+            failures.append((n, str(e)[:200]))
+            print(f"{n},0,FAILED: {str(e)[:120]}")
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark claims failed: "
+                         f"{[f[0] for f in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: the paper in ~30 seconds on CPU.
+
+Runs the Δ-window constrained conservative PDES, shows the two scalability
+claims side by side:
+  * simulation phase: utilization stays finite as the ring grows;
+  * measurement phase: the Δ-window bounds the time-horizon width that
+    diverges without it.
+
+Usage: PYTHONPATH=src python examples/quickstart.py
+"""
+import math
+
+from repro.core import PDESConfig, ensemble, theory
+
+
+def main():
+    print("=== unconstrained (paper Secs. III, Korniss et al. 2000) ===")
+    for L in (32, 128, 512):
+        ss = ensemble.steady_state(PDESConfig(L=L, n_v=1), n_trials=32,
+                                   seed=L, measure_steps=1500)
+        print(f"  L={L:4d}: utilization={ss.utilization:.4f} "
+              f"(paper u_inf={theory.U_INF_KPZ_NV1:.4f})  width w={ss.w:.2f}"
+              f"  <- width grows ~sqrt(L): measurement phase NOT scalable")
+
+    print("=== Δ-window constrained (the paper's contribution) ===")
+    for delta in (5.0, 10.0):
+        for L in (32, 128, 512):
+            ss = ensemble.steady_state(
+                PDESConfig(L=L, n_v=1, delta=delta), n_trials=32, seed=L,
+                measure_steps=1500)
+            print(f"  Δ={delta:5.1f} L={L:4d}: u={ss.utilization:.4f} "
+                  f"w={ss.w:.2f} (bounded by Δ) rate={ss.rate:.3f}")
+
+    print("=== capacity planning with the paper's own fits (Appendix) ===")
+    for delta in (2.0, 10.0, 100.0):
+        print(f"  Δ={delta:6.1f}: predicted cluster utilization "
+              f"u_RD={float(theory.u_rd(delta)):.3f} "
+              f"(what a Δ-window DP training cluster achieves with "
+              f"Exp(1)-spread stragglers)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: Δ-window constrained conservative PDES framework (PRE 67, 046703) in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,26 @@
+"""Core library: Δ-window constrained conservative PDES (the paper's contribution)."""
+from .horizon import (  # noqa: F401
+    PDESConfig,
+    SimState,
+    StepStats,
+    burn_in,
+    decode_events,
+    event_bits,
+    init_state,
+    measure,
+    run,
+    run_mean,
+    step_core,
+)
+from .measurement import (  # noqa: F401
+    GroupStats,
+    extreme_fluctuations,
+    group_decomposition,
+    progress_rate,
+    recombine_w2,
+    recombine_wa,
+    spread,
+    width,
+    width_abs,
+)
+from . import ensemble, scaling, theory  # noqa: F401

@@ -1,0 +1,302 @@
+"""Sharded PDES runtime: the paper's algorithm on a TPU mesh via shard_map.
+
+Two execution modes, both conservative (never violate causality):
+
+* ``exact`` — paper-faithful: every parallel step does a 2-column halo
+  exchange (``collective-permute`` along the ring axis) and, when the window
+  is finite, an exact GVT ``all-reduce(min)``.  This is Eq. (1) + Eq. (3)
+  verbatim.
+* ``commavoid`` — beyond-paper (DESIGN.md B3+B4): per chunk of K steps, one
+  K-wide halo exchange, one GVT all-reduce; shards *redundantly re-simulate*
+  the K boundary PEs of each neighbor using the counter-based event stream
+  (events.py), and the window uses the chunk-start (stale) GVT.  Because GVT
+  is non-decreasing, the stale window is a subset of the exact window: the
+  scheme remains conservative, and the collective+message count drops K-fold.
+  The *measured utilization cost* of the staleness is quantified with this
+  very simulator in EXPERIMENTS.md §Perf.
+
+Ensemble trials shard over the ``data`` (and optionally ``pod``) axes;
+the ring of L PEs shards over the ``model`` axis.  Statistics are
+accumulated shard-locally per step and combined with a single batched
+all-reduce per chunk — the measurement-phase pattern whose scalability the
+Δ-window guarantees (the paper's central point).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .events import counter_bits_block
+from .horizon import PDESConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """How the PDES ensemble maps onto the device mesh."""
+
+    ens_axes: tuple[str, ...] = ("data",)
+    ring_axis: str = "model"
+    mode: str = "exact"          # "exact" | "commavoid"
+    k_chunk: int = 16            # steps per chunk (halo width in commavoid)
+
+    def __post_init__(self):
+        if self.mode not in ("exact", "commavoid"):
+            raise ValueError(self.mode)
+        if self.k_chunk < 1:
+            raise ValueError("k_chunk must be >= 1")
+
+
+# ---------------------------------------------------------------------------
+# shard-local step math (shared by both modes and the host reference)
+# ---------------------------------------------------------------------------
+
+
+def _decode(bits, n_v: int, dtype):
+    site = jnp.remainder(bits[..., 0], jnp.uint32(n_v)).astype(jnp.int32)
+    is_left = site == 0
+    is_right = site == (n_v - 1)
+    u = (bits[..., 1] >> jnp.uint32(8)).astype(dtype) * 2.0**-24
+    eta = -jnp.log(u + 2.0**-25)
+    return is_left, is_right, eta
+
+
+def _update_haloed(tau_h, bits, gvt, cfg: PDESConfig):
+    """One step on a haloed strip: tau_h (B, W + 2) -> (tau_next (B, W), update)."""
+    dtype = tau_h.dtype
+    tau = tau_h[:, 1:-1]
+    left, right = tau_h[:, :-2], tau_h[:, 2:]
+    is_left, is_right, eta = _decode(bits, cfg.n_v, dtype)
+    if cfg.rd_mode:
+        causal_ok = jnp.ones(tau.shape, dtype=bool)
+    else:
+        ok_l = jnp.where(is_left, tau <= left, True)
+        ok_r = jnp.where(is_right, tau <= right, True)
+        causal_ok = ok_l & ok_r
+    if math.isinf(cfg.delta):
+        window_ok = jnp.ones(tau.shape, dtype=bool)
+    else:
+        window_ok = tau <= cfg.delta + gvt
+    update = causal_ok & window_ok
+    return tau + jnp.where(update, eta, 0.0), update
+
+
+def _local_stats(tau, update, dtype):
+    """Shard-local partial sums; additive across ring shards (except min)."""
+    return (
+        jnp.sum(update.astype(dtype), axis=-1),     # ucount
+        jnp.sum(tau, axis=-1),                      # sum
+        jnp.sum(tau * tau, axis=-1),                # sumsq
+        jnp.min(tau, axis=-1),                      # min (combine with pmin)
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharded runner
+# ---------------------------------------------------------------------------
+
+
+def _multi_axis_index(axes: Sequence[str]):
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def _shard_body(tau0, seed, *, cfg: PDESConfig, dist: DistConfig, n_steps: int,
+                L_total: int):
+    """Runs inside shard_map.  tau0: (B_l, L_l) local shard."""
+    dtype = tau0.dtype
+    ring = dist.ring_axis
+    ring_n = lax.axis_size(ring)
+    ring_i = lax.axis_index(ring)
+    B_l, L_l = tau0.shape
+    b0 = _multi_axis_index(dist.ens_axes) * B_l
+    l0 = ring_i * L_l
+    K = dist.k_chunk
+    n_chunks = -(-n_steps // K)  # stats trimmed to n_steps by caller
+    fwd = [(i, (i + 1) % ring_n) for i in range(ring_n)]   # receive from left
+    bwd = [(i, (i - 1) % ring_n) for i in range(ring_n)]   # receive from right
+
+    finite_window = not math.isinf(cfg.delta)
+
+    def exact_chunk(carry, c):
+        tau, off, comp = carry
+        step0 = c * K
+
+        def one(tau, s):
+            bits = counter_bits_block(seed, step0 + s, b0, l0, B_l, L_l)
+            lcol = lax.ppermute(tau[:, -1:], ring, perm=fwd)
+            rcol = lax.ppermute(tau[:, :1], ring, perm=bwd)
+            tau_h = jnp.concatenate([lcol, tau, rcol], axis=1)
+            if finite_window:
+                gvt = lax.pmin(jnp.min(tau, axis=-1, keepdims=True), ring)
+            else:
+                gvt = jnp.zeros((B_l, 1), dtype)  # unused
+            tau, update = _update_haloed(tau_h, bits, gvt, cfg)
+            return tau, _local_stats(tau, update, dtype)
+
+        tau, parts = lax.scan(one, tau, jnp.arange(K, dtype=jnp.int32))
+        return _finish_chunk(tau, off, comp, parts)
+
+    def commavoid_chunk(carry, c):
+        tau, off, comp = carry
+        step0 = c * K
+        # one K-wide halo exchange + one stale GVT per chunk
+        lhalo = lax.ppermute(tau[:, -K:], ring, perm=fwd)
+        rhalo = lax.ppermute(tau[:, :K], ring, perm=bwd)
+        tau_e = jnp.concatenate([lhalo, tau, rhalo], axis=1)   # (B_l, L_l + 2K)
+        if finite_window:
+            gvt = lax.pmin(jnp.min(tau, axis=-1, keepdims=True), ring)
+        else:
+            gvt = jnp.zeros((B_l, 1), dtype)
+        pe_idx = jnp.remainder(l0 - K + jnp.arange(L_l + 2 * K), L_total)
+
+        def one(tau_e, s):
+            from .events import counter_bits
+            bits = counter_bits(seed, step0 + s,
+                                (b0 + jnp.arange(B_l, dtype=jnp.int32))[:, None],
+                                pe_idx[None, :])
+            # non-periodic edges: edge columns turn garbage 1 cell/step; the
+            # interior [K, K + L_l) stays exact for all s < K (DESIGN.md B4).
+            tau_pad = jnp.concatenate(
+                [tau_e[:, :1], tau_e, tau_e[:, -1:]], axis=1)
+            nxt, update = _update_haloed(tau_pad, bits, gvt, cfg)
+            stats = _local_stats(nxt[:, K:K + L_l], update[:, K:K + L_l], dtype)
+            return nxt, stats
+
+        tau_e, parts = lax.scan(one, tau_e, jnp.arange(K, dtype=jnp.int32))
+        return _finish_chunk(tau_e[:, K:K + L_l], off, comp, parts)
+
+    def _finish_chunk(tau, off, comp, parts):
+        ucount, ssum, ssq, smin = parts               # each (K, B_l)
+        # one batched all-reduce for the whole chunk's statistics
+        tot = lax.psum(jnp.stack([ucount, ssum, ssq], axis=0), ring)
+        gmin = lax.pmin(smin, ring)
+        u = tot[0] / L_total
+        mean = tot[1] / L_total
+        w2 = tot[2] / L_total - mean * mean
+        gvt_abs = gmin + off[None, :]
+        # rebase once per chunk (fp32 hygiene)
+        shift = lax.pmin(jnp.min(tau, axis=-1), ring)
+        tau = tau - shift[:, None]
+        y = shift - comp
+        t = off + y
+        comp = (t - off) - y
+        return (tau, t, comp), (u, w2, gvt_abs)
+
+    chunk = exact_chunk if dist.mode == "exact" else commavoid_chunk
+    # carry starts replicated but becomes ensemble-varying after chunk 1;
+    # mark it varying up front so scan's carry types match.
+    z = lax.pcast(jnp.zeros((B_l,), dtype), dist.ens_axes, to="varying")
+    (tau, off, comp), (u, w2, gvt) = lax.scan(
+        chunk, (tau0, z, z), jnp.arange(n_chunks, dtype=jnp.int32))
+    stats = tuple(x.reshape(n_chunks * K, B_l) for x in (u, w2, gvt))
+    return tau, off, stats
+
+
+def run_sharded(
+    cfg: PDESConfig,
+    mesh: Mesh,
+    *,
+    n_trials: int,
+    n_steps: int,
+    seed: int = 0,
+    dist: DistConfig = DistConfig(),
+    dtype=jnp.float32,
+):
+    """Run the sharded PDES; returns (tau_abs (B, L), stats dict (n_steps, B)).
+
+    ``n_trials`` must divide the ensemble mesh extent product and ``cfg.L``
+    the ring extent.
+    """
+    ens_spec = P(dist.ens_axes, None)
+    fn = functools.partial(
+        _shard_body, cfg=cfg, dist=dist, n_steps=n_steps, L_total=cfg.L)
+    shard_fn = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(dist.ens_axes, dist.ring_axis), P()),
+        out_specs=(P(dist.ens_axes, dist.ring_axis), P(dist.ens_axes),
+                   (P(None, dist.ens_axes),) * 3),
+    )
+    tau0 = jnp.zeros((n_trials, cfg.L), dtype=dtype)
+    tau, off, (u, w2, gvt) = jax.jit(shard_fn)(tau0, jnp.uint32(seed))
+    stats = {"u": u[:n_steps], "w2": w2[:n_steps], "gvt": gvt[:n_steps]}
+    return tau + off[:, None], stats
+
+
+def lower_sharded(
+    cfg: PDESConfig,
+    mesh: Mesh,
+    *,
+    n_trials: int,
+    n_steps: int,
+    dist: DistConfig = DistConfig(),
+    dtype=jnp.float32,
+):
+    """Lower (no execution) for the multi-pod dry-run / roofline of the core."""
+    fn = functools.partial(
+        _shard_body, cfg=cfg, dist=dist, n_steps=n_steps, L_total=cfg.L)
+    shard_fn = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(dist.ens_axes, dist.ring_axis), P()),
+        out_specs=(P(dist.ens_axes, dist.ring_axis), P(dist.ens_axes),
+                   (P(None, dist.ens_axes),) * 3),
+    )
+    tau0 = jax.ShapeDtypeStruct((n_trials, cfg.L), dtype)
+    return jax.jit(shard_fn).lower(tau0, jax.ShapeDtypeStruct((), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# single-device reference with the identical counter event stream
+# ---------------------------------------------------------------------------
+
+
+def run_reference(
+    cfg: PDESConfig,
+    *,
+    n_trials: int,
+    n_steps: int,
+    seed: int = 0,
+    stale_every: int | None = None,
+    dtype=jnp.float32,
+):
+    """Unsharded oracle for run_sharded (same counter-based event stream).
+
+    ``stale_every=None`` reproduces mode="exact"; ``stale_every=K`` reproduces
+    mode="commavoid" with k_chunk=K (window base refreshed every K steps).
+
+    Returns (tau_abs (B, L), stats dict (n_steps, B)) — bitwise comparable to
+    run_sharded up to reduction ordering (min/sum over shards vs. full axis).
+    """
+    B, L = n_trials, cfg.L
+    tau = jnp.zeros((B, L), dtype=dtype)
+    K = stale_every or 1
+
+    def one_step(carry, s):
+        tau, gvt_stale = carry
+        bits = counter_bits_block(jnp.uint32(seed), s, jnp.int32(0), jnp.int32(0), B, L)
+        tau_h = jnp.concatenate([tau[:, -1:], tau, tau[:, :1]], axis=1)
+        if stale_every is None:
+            gvt = jnp.min(tau, axis=-1, keepdims=True)
+        else:
+            refresh = (s % K) == 0
+            gvt = jnp.where(refresh, jnp.min(tau, axis=-1, keepdims=True), gvt_stale)
+        tau, update = _update_haloed(tau_h, bits, gvt, cfg)
+        u = jnp.mean(update.astype(dtype), axis=-1)
+        mean = jnp.mean(tau, axis=-1)
+        w2 = jnp.mean(tau * tau, axis=-1) - mean * mean
+        return (tau, gvt), (u, w2, jnp.min(tau, axis=-1))
+
+    init = (tau, jnp.zeros((B, 1), dtype))
+    (tau, _), (u, w2, gvt) = lax.scan(
+        one_step, init, jnp.arange(n_steps, dtype=jnp.int32))
+    return tau, {"u": u, "w2": w2, "gvt": gvt}

@@ -1,0 +1,137 @@
+"""Ensemble orchestration: steady-state sweeps over (L, N_V, Δ).
+
+Host-side drivers around the jitted scan kernels in ``horizon``.  These are
+what the paper calls "simulations of the simulations": each call simulates an
+ensemble of independent PDES rings and extracts configurational averages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from . import horizon
+from .horizon import PDESConfig
+
+
+@dataclasses.dataclass
+class SteadyState:
+    """Time- and ensemble-averaged steady-state observables."""
+
+    cfg: PDESConfig
+    n_trials: int
+    burn_in_steps: int
+    measure_steps: int
+    utilization: float
+    utilization_err: float
+    w: float          # <w> = <sqrt(w2)>  (ensemble avg of per-trial widths)
+    w2: float         # <w^2>
+    wa: float         # <w_a>
+    rate: float       # GVT growth rate per parallel step
+
+
+def default_burn_in(cfg: PDESConfig) -> int:
+    """Heuristic burn-in long enough to pass the crossover.
+
+    Unconstrained KPZ: t_x ~ L^{3/2}; constrained: saturation at t_p = O(Δ·N_V)
+    (width reaches ~Δ after ~Δ mean increments, each taking ~N_V picks to hit
+    a border).  We take a safety factor over both.
+    """
+    if math.isinf(cfg.delta):
+        t = 4.0 * (cfg.L ** 1.5)
+    else:
+        t = 60.0 * max(cfg.delta, 1.0) * max(1.0, math.sqrt(cfg.n_v)) + 2.0 * cfg.L
+    return int(min(max(t, 200), 2_000_000))
+
+
+def steady_state(
+    cfg: PDESConfig,
+    *,
+    n_trials: int = 64,
+    seed: int = 0,
+    burn_in_steps: int | None = None,
+    measure_steps: int | None = None,
+) -> SteadyState:
+    """Burn in, then time-average StepStats over ``measure_steps``."""
+    if burn_in_steps is None:
+        burn_in_steps = default_burn_in(cfg)
+    if measure_steps is None:
+        measure_steps = max(200, burn_in_steps // 4)
+    key = jax.random.key(seed)
+    k_burn, k_meas = jax.random.split(key)
+    state = horizon.init_state(cfg, n_trials)
+    state = horizon.burn_in(state, k_burn, cfg, burn_in_steps)
+    g0 = np.asarray(state.offset)  # GVT at measurement start (tau rebased)
+    state, stats = horizon.run_mean(state, k_meas, cfg, measure_steps)
+    u = np.asarray(stats.utilization)
+    w2 = np.asarray(stats.w2)
+    g1 = np.asarray(state.offset) + np.asarray(state.tau).min(axis=-1)
+    return SteadyState(
+        cfg=cfg,
+        n_trials=n_trials,
+        burn_in_steps=burn_in_steps,
+        measure_steps=measure_steps,
+        utilization=float(u.mean()),
+        utilization_err=float(u.std(ddof=1) / np.sqrt(n_trials)),
+        w=float(np.sqrt(w2).mean()),
+        w2=float(w2.mean()),
+        wa=float(np.asarray(stats.wa).mean()),
+        rate=float((g1 - g0).mean() / measure_steps),
+    )
+
+
+def utilization_vs_L(
+    Ls: Sequence[int],
+    *,
+    n_v: int = 1,
+    delta: float = math.inf,
+    rd_mode: bool = False,
+    n_trials: int = 64,
+    seed: int = 0,
+    burn_in_steps: int | None = None,
+    measure_steps: int | None = None,
+):
+    """Steady-state utilization for a range of ring sizes (Figs. 2, 5)."""
+    out = []
+    for i, L in enumerate(Ls):
+        cfg = PDESConfig(L=int(L), n_v=n_v, delta=delta, rd_mode=rd_mode)
+        out.append(
+            steady_state(
+                cfg,
+                n_trials=n_trials,
+                seed=seed + i,
+                burn_in_steps=burn_in_steps,
+                measure_steps=measure_steps,
+            )
+        )
+    return out
+
+
+def width_evolution(
+    cfg: PDESConfig,
+    *,
+    n_steps: int,
+    n_trials: int = 64,
+    seed: int = 0,
+):
+    """Full <w(t)>, <w_a(t)>, <u(t)> series (Figs. 2, 4, 8).
+
+    Returns dict of numpy arrays with leading time axis.
+    """
+    key = jax.random.key(seed)
+    state = horizon.init_state(cfg, n_trials)
+    _, stats = horizon.run(state, key, cfg, n_steps)
+    w2 = np.asarray(stats.w2)
+    return {
+        "t": np.arange(1, n_steps + 1),
+        "u": np.asarray(stats.utilization).mean(axis=1),
+        "w": np.sqrt(w2).mean(axis=1),
+        "w2": w2.mean(axis=1),
+        "wa": np.asarray(stats.wa).mean(axis=1),
+        "gvt": np.asarray(stats.gvt).mean(axis=1),
+        "max_dev": np.asarray(stats.max_dev).mean(axis=1),
+        "min_dev": np.asarray(stats.min_dev).mean(axis=1),
+    }

@@ -1,0 +1,2 @@
+"""Deterministic, shardable data pipeline."""
+from .pipeline import DataConfig, Prefetcher, make_batch  # noqa: F401

@@ -1,0 +1,6 @@
+"""Distribution layer: sharding rules, Δ-window bounded-asynchrony scheduler."""
+from .sharding import (Parallelism, batch_pspecs, cache_pspecs,  # noqa: F401
+                       make_constrain, param_pspecs, param_shardings,
+                       to_shardings)
+from .delta_sync import (DeltaScheduler, DeltaSyncConfig,  # noqa: F401
+                         gated_microbatch_weights, predicted_utilization)

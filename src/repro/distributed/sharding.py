@@ -1,0 +1,291 @@
+"""Sharding rules: logical param/activation roles -> PartitionSpecs.
+
+Strategy (DESIGN.md §4): FSDP over the ``data`` axis (parameter dim-0
+sharding, ZeRO-3 style all-gather on use) combined with tensor parallelism
+over the ``model`` axis (Megatron column/row sharding of attention heads and
+FFN hidden).  Batch shards over (pod, data).  Dims that do not divide their
+axis fall back to replication (e.g. arctic's 56 heads on a 16-way TP axis).
+
+MoE expert weights keep experts unsharded and shard d_ff over TP ("TP-MoE",
+see models/moe.py docstring); an EP alternative is a §Perf experiment.
+
+KV caches shard batch over dp and sequence over TP (sequence-parallel cache)
+so decode_32k (B=128) and long_500k (B=1) both fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import keystr
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallelism:
+    mesh: Mesh
+    dp_axes: tuple[str, ...] = ("data",)     # batch (includes "pod" if present)
+    fsdp_axis: Optional[str] = "data"        # param dim-0 sharding
+    tp_axis: Optional[str] = "model"
+    # §Perf A5 (expert-parallel joint-batch profile): batch shards over
+    # (dp, tp) everywhere, MoE experts shard over tp with a dispatch
+    # all-to-all, dense FFN/vocab give up tp sharding (they are small in the
+    # MoE archs this targets).  Requires global_batch % (dp·tp) == 0.
+    joint_batch: bool = False
+    # Decode profile (§Perf D1): weights stay *resident* (no FSDP all-gather
+    # per decode step) — experts shard over the data axis (EP) + d_ff/heads
+    # over TP.  Only safe when the resident shard fits HBM (all 10 archs do).
+    serve: bool = False
+
+    def axis_size(self, name) -> int:
+        if name is None:
+            return 1
+        if isinstance(name, tuple):
+            s = 1
+            for n in name:
+                s *= self.mesh.shape[n]
+            return s
+        return self.mesh.shape[name]
+
+    def div(self, axis, dim: int):
+        """axis name if dim divides the axis size, else None (replicate)."""
+        return axis if axis is not None and dim % self.axis_size(axis) == 0 \
+            else None
+
+
+def _param_spec(path: str, shape, par: Parallelism) -> P:
+    """Spec for the *trailing* (base) dims; leading stack dims -> None."""
+    fs, tp = par.fsdp_axis, par.tp_axis
+    name = path.split("'")[-2] if "'" in path else path
+
+    def base() -> tuple:
+        if par.serve:
+            return _serve_base(name, path, shape, par)
+        if name in ("table", "lm_head"):                 # (V, d) vocab-TP
+            if par.joint_batch:                          # A5: vocab replicated
+                return (None, par.div(fs, shape[-1]))
+            return (par.div(tp, shape[-2]), par.div(fs, shape[-1]))
+        if name == "pos_table":
+            return (None, par.div(fs, shape[-1]))
+        if name == "wq":                                 # (d, H, hd)
+            return (par.div(fs, shape[-3]), par.div(tp, shape[-2]), None)
+        if name in ("wk", "wv"):                         # (d, KH, hd)
+            return (par.div(fs, shape[-3]), par.div(tp, shape[-2]), None)
+        if name == "wo" and len(shape) >= 3 and "'moe'" not in path:
+            return (par.div(tp, shape[-3]), None, par.div(fs, shape[-1]))
+        if "'moe'" in path:
+            if par.joint_batch:                          # A5: EP over tp
+                if name in ("wi", "wg"):                 # (E, d, f)
+                    return (par.div(tp, shape[-3]), par.div(fs, shape[-2]),
+                            None)
+                if name == "wo":                         # (E, f, d)
+                    return (par.div(tp, shape[-3]), None,
+                            par.div(fs, shape[-1]))
+            if name in ("wi", "wg"):                     # (E, d, f)
+                return (None, par.div(fs, shape[-2]), par.div(tp, shape[-1]))
+            if name == "wo":                             # (E, f, d)
+                return (None, par.div(tp, shape[-2]), par.div(fs, shape[-1]))
+            if name == "router":                         # (d, E)
+                return (par.div(fs, shape[-2]), None)
+        if name in ("wi", "wg"):                         # (d, f)
+            if par.joint_batch:                          # A5: FSDP only
+                return (par.div(fs, shape[-2]), None)
+            return (par.div(fs, shape[-2]), par.div(tp, shape[-1]))
+        if name == "wo":                                 # (f, d)
+            if par.joint_batch:
+                return (None, par.div(fs, shape[-1]))
+            return (par.div(tp, shape[-2]), par.div(fs, shape[-1]))
+        if name in ("in_proj", "shared_in"):             # (d, proj)
+            return (par.div(fs, shape[-2]), par.div(tp, shape[-1]))
+        if name == "out_proj":                           # (d_inner, d)
+            return (par.div(tp, shape[-2]), par.div(fs, shape[-1]))
+        if name == "conv_w":                             # (K, C)
+            return (None, par.div(tp, shape[-1]))
+        return tuple(None for _ in shape)                # vectors, norms, A_log…
+
+    b = base()
+    pad = len(shape) - len(b)
+    assert pad >= 0, (path, shape, b)
+    return P(*((None,) * pad + tuple(b)))
+
+
+def _serve_base(name, path, shape, par: Parallelism):
+    """Resident-weight decode sharding: no FSDP axis; EP + TP only."""
+    tp = par.tp_axis
+    ep = "data"          # experts over the data axis (batch is small at decode)
+    if name in ("table", "lm_head", "pos_table"):
+        return (par.div(tp, shape[-2]), None)
+    if name == "wq" or (name in ("wk", "wv")):           # (d, H|KH, hd)
+        if shape[-2] % par.axis_size(tp) == 0:
+            return (None, tp, None)
+        return (None, None, par.div(tp, shape[-1]))      # shard head_dim
+    if name == "wo" and len(shape) >= 3 and "'moe'" not in path:
+        if shape[-3] % par.axis_size(tp) == 0:           # (H, hd, d)
+            return (tp, None, None)
+        return (None, par.div(tp, shape[-2]), None)
+    if "'moe'" in path:
+        if name in ("wi", "wg"):                          # (E, d, f)
+            return (par.div(ep, shape[-3]), None, par.div(tp, shape[-1]))
+        if name == "wo":                                  # (E, f, d)
+            return (par.div(ep, shape[-3]), par.div(tp, shape[-2]), None)
+        if name == "router":
+            return (None, None)
+    if name in ("wi", "wg", "in_proj", "shared_in"):      # (d, f)
+        return (None, par.div(tp, shape[-1]))
+    if name in ("wo", "out_proj"):                        # (f, d)
+        return (par.div(tp, shape[-2]), None)
+    if name == "conv_w":
+        return (None, par.div(tp, shape[-1]))
+    return tuple(None for _ in shape)
+
+
+def param_pspecs(params, par: Parallelism):
+    """PartitionSpec pytree matching a (real or ShapeDtypeStruct) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, a: _param_spec(keystr(kp), a.shape, par), params)
+
+
+def param_shardings(params, par: Parallelism):
+    return jax.tree.map(lambda s: NamedSharding(par.mesh, s),
+                        param_pspecs(params, par))
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+
+def make_constrain(par: Parallelism, n_heads: int | None = None):
+    """constrain(x, kind) applying with_sharding_constraint by logical role.
+
+    ``n_heads``: the model's attention head count; the A2 joint-batch
+    attention layout only activates when heads do NOT divide the TP axis
+    (otherwise head-TP is already optimal and the extra resharding costs
+    10-20x in backward all-gathers — measured, EXPERIMENTS.md §Perf A2).
+    """
+    dp, tp = par.dp_axes, par.tp_axis
+    heads_divisible = (n_heads is None or tp is None
+                       or n_heads % par.axis_size(tp) == 0)
+
+    def joint_batch(b):
+        axes = tuple(dp) + ((tp,) if tp is not None else ())
+        return axes if b % par.axis_size(axes) == 0 else None
+
+    def spec_for(x, kind) -> P | None:
+        if kind == "act":            # (B, S, d)
+            if par.joint_batch:
+                j = joint_batch(x.shape[0])
+                if j is not None:
+                    return P(j, None, None)
+            return P(par.div(dp, x.shape[0]), None, None)
+        if kind == "attn_in":        # (B, S, d) entering attention (§Perf A2)
+            if not heads_divisible:
+                j = joint_batch(x.shape[0])
+                if j is not None:
+                    return P(j, None, None)
+            return P(par.div(dp, x.shape[0]), None, None)
+        if kind == "act_ff":         # (B, S, f)
+            if par.joint_batch:      # A5: dense FFN keeps the joint batch
+                j = joint_batch(x.shape[0])
+                if j is not None:
+                    return P(j, None, None)
+            return P(par.div(dp, x.shape[0]), None, par.div(tp, x.shape[-1]))
+        if kind in ("heads", "kv_heads"):   # (B, S, H, hd)
+            if heads_divisible:
+                # q heads TP-shard; GQA kv heads (< tp) replicate — small,
+                # and flash broadcasts them across q groups.
+                return P(par.div(dp, x.shape[0]), None,
+                         par.div(tp, x.shape[2]), None)
+            # §Perf A2: the MODEL's heads don't divide TP (arctic 56H,
+            # whisper/gemma2 8H on a 16-way axis) — shard the batch over
+            # (dp, tp) jointly so attention work still spreads over every
+            # chip; the batch split happens on the (B,S,d) "attn_in" input
+            # and is pulled back to dp-only at the attention output ("act").
+            j = joint_batch(x.shape[0])
+            if j is not None:
+                return P(j, None, None, None)
+            return P(par.div(dp, x.shape[0]), None, None, None)
+        if kind == "logits":         # (B, chunk, V)
+            if par.joint_batch:
+                j = joint_batch(x.shape[0])
+                if j is not None:
+                    return P(j, None, None)
+            return P(par.div(dp, x.shape[0]), None, par.div(tp, x.shape[-1]))
+        if kind == "moe_hidden":     # (B, E, C, f)
+            if par.joint_batch:      # A5: EP — experts over tp, batch over dp
+                return P(par.div(dp, x.shape[0]), par.div(tp, x.shape[1]),
+                         None, None)
+            return P(par.div(dp, x.shape[0]), None, None,
+                     par.div(tp, x.shape[-1]))
+        if kind == "moe_in":         # (B, E, C, d) dispatch tensor (A5 only)
+            if par.joint_batch:
+                return P(par.div(dp, x.shape[0]), par.div(tp, x.shape[1]),
+                         None, None)
+            return None
+        if kind == "moe_out":        # (B, E, C, d) combine tensor (A5 only)
+            if par.joint_batch:
+                j = joint_batch(x.shape[0])
+                if j is not None:
+                    return P(j, None, None, None)
+            return None
+        return None
+
+    def constrain(x, kind):
+        s = spec_for(x, kind)
+        if s is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(par.mesh, s))
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# batches and caches
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch, par: Parallelism):
+    def spec(a):
+        axes = par.dp_axes
+        if par.joint_batch and par.tp_axis is not None:
+            joint = tuple(par.dp_axes) + (par.tp_axis,)
+            if a.shape[0] % par.axis_size(joint) == 0:
+                axes = joint
+        return P(par.div(axes, a.shape[0]), *(None,) * (a.ndim - 1))
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspecs(cache, par: Parallelism):
+    """KV caches (..., B, S, KH, hd) -> batch over dp, sequence over TP.
+
+    SSM states (..., B, H, P, N) -> batch over dp, heads over TP.
+    Conv caches (..., B, K-1, C) -> batch over dp, channels over TP.
+    """
+    dp, tp = par.dp_axes, par.tp_axis
+
+    def spec(path, a):
+        name = keystr(path)
+        if a.ndim >= 4 and ("'k" in name or "'v" in name or "xk" in name
+                            or "xv" in name):
+            lead = a.ndim - 4
+            return P(*(None,) * lead, par.div(dp, a.shape[lead]),
+                     par.div(tp, a.shape[lead + 1]), None, None)
+        if "ssm" in name and a.ndim >= 4:
+            lead = a.ndim - 4
+            return P(*(None,) * lead, par.div(dp, a.shape[lead]),
+                     par.div(tp, a.shape[lead + 1]), None, None)
+        if "conv" in name and a.ndim >= 3:
+            lead = a.ndim - 3
+            return P(*(None,) * lead, par.div(dp, a.shape[lead]), None,
+                     par.div(tp, a.shape[lead + 2]))
+        return P(*(None,) * a.ndim)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def to_shardings(pspecs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))

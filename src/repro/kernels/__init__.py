@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the PDES hot loop (validated in interpret mode on CPU)."""
+from .ops import pdes_step, pdes_multistep, step_ring, simulate, ring_halo  # noqa: F401

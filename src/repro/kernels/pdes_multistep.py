@@ -1,0 +1,130 @@
+"""K-step VMEM-resident PDES kernel (Pallas, TPU target).
+
+Beyond-paper optimization B2 (DESIGN.md §5): the one-step kernel is
+HBM-bandwidth-bound at ~12 bytes of traffic per PE-step (tau in/out + bits).
+Keeping the ring resident in VMEM across K steps removes the tau round trips:
+
+    traffic/step ≈ 8 bytes(bits) + 8/K bytes(tau)   → ~1.5× less at K = 16,
+    and on real TPU with in-kernel RNG (pltpu.prng_*) the bits stream also
+    disappears, leaving ~8/K bytes/PE-step — a K× intensity gain.
+
+Because each program instance owns *entire rings* ``(block_b, L)``, the exact
+global virtual time is available locally every step (a lane-wise min), so this
+kernel implements the *paper-faithful* exact-GVT algorithm, not the stale-GVT
+approximation.
+
+Grid/tiling: grid = (ensemble blocks, K).  The K dimension is sequential
+("arbitrary"): the tau tile is revisited — written at step k, re-read at
+k + 1 — which Pallas guarantees for the same output block across grid steps.
+Event bits are streamed one step at a time as ``(1, block_b, L, 2)`` tiles so
+VMEM holds only one step's bits regardless of K.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tau_in_ref, bits_ref, tau_ref, ucount_ref, min_ref, sum_ref,
+            sumsq_ref, *, n_v: int, delta: float, rd_mode: bool):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        tau_ref[...] = tau_in_ref[...]
+
+    dtype = tau_ref.dtype
+    tau = tau_ref[...]                      # (b, L) full rings
+    bits = bits_ref[0]                      # (b, L, 2) this step's events
+
+    site = jnp.remainder(bits[..., 0], jnp.uint32(n_v)).astype(jnp.int32)
+    is_left = site == 0
+    is_right = site == (n_v - 1)
+    u = (bits[..., 1] >> jnp.uint32(8)).astype(dtype) * 2.0**-24
+    eta = -jnp.log(u + 2.0**-25)
+
+    left = jnp.roll(tau, 1, axis=-1)        # periodic: full ring resident
+    right = jnp.roll(tau, -1, axis=-1)
+    if rd_mode:
+        causal_ok = jnp.ones(tau.shape, dtype=bool)
+    else:
+        ok_l = jnp.where(is_left, tau <= left, True)
+        ok_r = jnp.where(is_right, tau <= right, True)
+        causal_ok = ok_l & ok_r
+    if math.isinf(delta):
+        window_ok = jnp.ones(tau.shape, dtype=bool)
+    else:
+        gvt = jnp.min(tau, axis=-1, keepdims=True)   # exact GVT, in-VMEM
+        window_ok = tau <= delta + gvt
+    update = causal_ok & window_ok
+    tau_next = tau + jnp.where(update, eta, 0.0)
+
+    tau_ref[...] = tau_next
+    ucount_ref[...] = jnp.sum(update.astype(dtype), axis=-1)[None, :]
+    min_ref[...] = jnp.min(tau_next, axis=-1)[None, :]
+    sum_ref[...] = jnp.sum(tau_next, axis=-1)[None, :]
+    sumsq_ref[...] = jnp.sum(tau_next * tau_next, axis=-1)[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_v", "delta", "rd_mode", "block_b", "interpret"),
+)
+def pdes_multistep(
+    tau: jax.Array,
+    bits: jax.Array,
+    *,
+    n_v: int,
+    delta: float,
+    rd_mode: bool = False,
+    block_b: int = 8,
+    interpret: bool = True,
+):
+    """K fused exact-GVT PDES steps on full rings.
+
+    Args:
+      tau: (B, L) full rings (periodic).
+      bits: (K, B, L, 2) uint32 event bits for the K steps.
+
+    Returns:
+      (tau_final (B, L), stats dict of (K, B): ucount, min, sum, sumsq),
+      per-step stats measured after each step's update.
+    """
+    B, L = tau.shape
+    K = bits.shape[0]
+    assert bits.shape == (K, B, L, 2)
+    bb = min(block_b, B)
+    while B % bb:
+        bb -= 1
+    grid = (B // bb, K)
+    kern = functools.partial(_kernel, n_v=n_v, delta=delta, rd_mode=rd_mode)
+    out_shape = [
+        jax.ShapeDtypeStruct((B, L), tau.dtype),
+        jax.ShapeDtypeStruct((K, B), tau.dtype),
+        jax.ShapeDtypeStruct((K, B), tau.dtype),
+        jax.ShapeDtypeStruct((K, B), tau.dtype),
+        jax.ShapeDtypeStruct((K, B), tau.dtype),
+    ]
+    tau_final, ucount, mn, sm, ssq = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, L), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, bb, L, 2), lambda i, k: (k, i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, L), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, bb), lambda i, k: (k, i)),
+            pl.BlockSpec((1, bb), lambda i, k: (k, i)),
+            pl.BlockSpec((1, bb), lambda i, k: (k, i)),
+            pl.BlockSpec((1, bb), lambda i, k: (k, i)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(tau, bits)
+    stats = dict(ucount=ucount, min=mn, sum=sm, sumsq=ssq)
+    return tau_final, stats

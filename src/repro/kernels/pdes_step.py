@@ -1,0 +1,132 @@
+"""Fused one-step PDES update kernel (Pallas, TPU target).
+
+The paper's hot spot is the per-step horizon sweep: in unfused form XLA emits
+~7 HBM round trips per step (two rolls, two compares, a select, a min
+reduction, stats).  This kernel performs them in a single VMEM pass:
+read tau + event bits once, write tau' + per-row partial stats once.
+
+Layout: the caller passes a *haloed* chunk ``tau`` of shape ``(B, Lc + 2)``
+whose first/last columns hold the left/right neighbor values (wrap-around
+columns for a full ring, or the halo received from neighbor shards in the
+distributed runtime).  The window base ``gvt`` is supplied by the caller
+(exact current minimum, or a stale/conservative bound — DESIGN.md B3).
+
+Grid/tiling: grid is over ensemble-row blocks; each program instance owns a
+``(block_b, Lc + 2)`` VMEM tile.  Row blocks are independent, so the grid is
+embarrassingly parallel ("parallel" dimension semantics).  The lane dimension
+(Lc) is kept whole per tile because the neighbor stencil couples the entire
+ring; VMEM budget is checked by the wrapper (ops.py).
+
+TPU note: on CPU we validate with ``interpret=True``; on real TPU hardware
+the uint32->exponential decode happens in VREGs and the kernel is purely
+HBM-bandwidth-bound (arithmetic intensity ~1 flop/byte — see the roofline
+discussion in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tau_ref, bits_ref, gvt_ref, out_ref, ucount_ref, min_ref,
+            sum_ref, sumsq_ref, *, n_v: int, delta: float, rd_mode: bool):
+    dtype = out_ref.dtype
+    tau_h = tau_ref[...]                      # (b, Lc + 2) haloed
+    tau = tau_h[:, 1:-1]
+    left = tau_h[:, :-2]
+    right = tau_h[:, 2:]
+    bits = bits_ref[...]                      # (b, Lc, 2) uint32
+
+    site = jnp.remainder(bits[..., 0], jnp.uint32(n_v)).astype(jnp.int32)
+    is_left = site == 0
+    is_right = site == (n_v - 1)
+    u = (bits[..., 1] >> jnp.uint32(8)).astype(dtype) * 2.0**-24
+    eta = -jnp.log(u + 2.0**-25)
+
+    if rd_mode:
+        causal_ok = jnp.ones(tau.shape, dtype=bool)
+    else:
+        ok_l = jnp.where(is_left, tau <= left, True)
+        ok_r = jnp.where(is_right, tau <= right, True)
+        causal_ok = ok_l & ok_r
+    if math.isinf(delta):
+        window_ok = jnp.ones(tau.shape, dtype=bool)
+    else:
+        window_ok = tau <= delta + gvt_ref[...]  # (b, 1) broadcast
+    update = causal_ok & window_ok
+    tau_next = tau + jnp.where(update, eta, 0.0)
+
+    out_ref[...] = tau_next
+    ucount_ref[...] = jnp.sum(update.astype(dtype), axis=-1, keepdims=True)
+    min_ref[...] = jnp.min(tau_next, axis=-1, keepdims=True)
+    sum_ref[...] = jnp.sum(tau_next, axis=-1, keepdims=True)
+    sumsq_ref[...] = jnp.sum(tau_next * tau_next, axis=-1, keepdims=True)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_v", "delta", "rd_mode", "block_b", "interpret"),
+)
+def pdes_step(
+    tau_haloed: jax.Array,
+    bits: jax.Array,
+    gvt: jax.Array,
+    *,
+    n_v: int,
+    delta: float,
+    rd_mode: bool = False,
+    block_b: int = 8,
+    interpret: bool = True,
+):
+    """One fused PDES step on a haloed chunk.
+
+    Args:
+      tau_haloed: (B, Lc + 2) local times with neighbor halo columns.
+      bits: (B, Lc, 2) uint32 event bits.
+      gvt: (B, 1) window base.
+      block_b: ensemble rows per VMEM tile.
+      interpret: run the kernel body in interpret mode (CPU validation).
+
+    Returns:
+      (tau_next (B, Lc), stats dict of (B,): ucount, min, sum, sumsq).
+    """
+    B, Lc2 = tau_haloed.shape
+    Lc = Lc2 - 2
+    assert bits.shape == (B, Lc, 2), (bits.shape, (B, Lc, 2))
+    assert gvt.shape == (B, 1)
+    bb = min(block_b, B)
+    while B % bb:
+        bb -= 1
+    grid = (B // bb,)
+    kern = functools.partial(_kernel, n_v=n_v, delta=delta, rd_mode=rd_mode)
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Lc), tau_haloed.dtype),
+        jax.ShapeDtypeStruct((B, 1), tau_haloed.dtype),
+        jax.ShapeDtypeStruct((B, 1), tau_haloed.dtype),
+        jax.ShapeDtypeStruct((B, 1), tau_haloed.dtype),
+        jax.ShapeDtypeStruct((B, 1), tau_haloed.dtype),
+    ]
+    tau_next, ucount, mn, sm, ssq = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, Lc2), lambda i: (i, 0)),
+            pl.BlockSpec((bb, Lc, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, Lc), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(tau_haloed, bits, gvt)
+    stats = dict(ucount=ucount[:, 0], min=mn[:, 0], sum=sm[:, 0], sumsq=ssq[:, 0])
+    return tau_next, stats

@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for the Pallas PDES kernels.
+
+Each function mirrors the corresponding kernel's arithmetic *exactly*
+(same event decode, same op order) so the kernel tests can assert bitwise
+or near-bitwise equality.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode(bits: jnp.ndarray, n_v: int, dtype=jnp.float32):
+    """bits (..., 2) uint32 -> (is_left, is_right, eta).  Mirrors the kernels."""
+    site = jnp.remainder(bits[..., 0], jnp.uint32(n_v)).astype(jnp.int32)
+    is_left = site == 0
+    is_right = site == (n_v - 1)
+    u = (bits[..., 1] >> jnp.uint32(8)).astype(dtype) * 2.0**-24
+    eta = -jnp.log(u + 2.0**-25)
+    return is_left, is_right, eta
+
+
+def pdes_step_ref(
+    tau_haloed: jnp.ndarray,
+    bits: jnp.ndarray,
+    gvt: jnp.ndarray,
+    *,
+    n_v: int,
+    delta: float,
+    rd_mode: bool = False,
+):
+    """Oracle for kernels.pdes_step: one step on a haloed chunk.
+
+    Args:
+      tau_haloed: (B, Lc + 2) with halo columns at [:, 0] and [:, -1].
+      bits: (B, Lc, 2) uint32 event bits for the interior.
+      gvt: (B, 1) window base (exact or stale global virtual time).
+      n_v, delta, rd_mode: PDES parameters (delta may be inf).
+
+    Returns:
+      (tau_next (B, Lc), update (B, Lc) bool,
+       stats dict of (B,) arrays: ucount, min, sum, sumsq).
+    """
+    dtype = tau_haloed.dtype
+    tau = tau_haloed[:, 1:-1]
+    left = tau_haloed[:, :-2]
+    right = tau_haloed[:, 2:]
+    is_left, is_right, eta = decode(bits, n_v, dtype)
+    if rd_mode:
+        causal_ok = jnp.ones(tau.shape, dtype=bool)
+    else:
+        ok_l = jnp.where(is_left, tau <= left, True)
+        ok_r = jnp.where(is_right, tau <= right, True)
+        causal_ok = ok_l & ok_r
+    if math.isinf(delta):
+        window_ok = jnp.ones(tau.shape, dtype=bool)
+    else:
+        window_ok = tau <= delta + gvt
+    update = causal_ok & window_ok
+    tau_next = tau + jnp.where(update, eta, 0.0)
+    stats = dict(
+        ucount=jnp.sum(update.astype(dtype), axis=-1),
+        min=jnp.min(tau_next, axis=-1),
+        sum=jnp.sum(tau_next, axis=-1),
+        sumsq=jnp.sum(tau_next * tau_next, axis=-1),
+    )
+    return tau_next, update, stats
+
+
+def pdes_multistep_ref(
+    tau: jnp.ndarray,
+    bits: jnp.ndarray,
+    *,
+    n_v: int,
+    delta: float,
+    rd_mode: bool = False,
+):
+    """Oracle for kernels.pdes_multistep: K exact-GVT steps on full rings.
+
+    Args:
+      tau: (B, L) full rings (no halo; periodic).
+      bits: (K, B, L, 2) uint32 event bits.
+
+    Returns:
+      (tau_final (B, L), stats dict of (K, B): ucount, min, sum, sumsq)
+      where per-step stats are measured *after* that step's update.
+    """
+    dtype = tau.dtype
+    K = bits.shape[0]
+
+    def body(tau, bits_k):
+        is_left, is_right, eta = decode(bits_k, n_v, dtype)
+        left = jnp.roll(tau, 1, axis=-1)
+        right = jnp.roll(tau, -1, axis=-1)
+        if rd_mode:
+            causal_ok = jnp.ones(tau.shape, dtype=bool)
+        else:
+            ok_l = jnp.where(is_left, tau <= left, True)
+            ok_r = jnp.where(is_right, tau <= right, True)
+            causal_ok = ok_l & ok_r
+        if math.isinf(delta):
+            window_ok = jnp.ones(tau.shape, dtype=bool)
+        else:
+            gvt = jnp.min(tau, axis=-1, keepdims=True)  # exact: full ring in block
+            window_ok = tau <= delta + gvt
+        update = causal_ok & window_ok
+        tau_next = tau + jnp.where(update, eta, 0.0)
+        stats = (
+            jnp.sum(update.astype(dtype), axis=-1),
+            jnp.min(tau_next, axis=-1),
+            jnp.sum(tau_next, axis=-1),
+            jnp.sum(tau_next * tau_next, axis=-1),
+        )
+        return tau_next, stats
+
+    tau_final, (ucount, mins, sums, sumsqs) = jax.lax.scan(body, tau, bits)
+    return tau_final, dict(ucount=ucount, min=mins, sum=sums, sumsq=sumsqs)

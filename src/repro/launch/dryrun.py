@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, the abstract train state /
+serve cache with full shardings, and runs ``jit(step).lower(...).compile()``.
+Success proves the distribution config is coherent; memory_analysis() proves
+it fits; cost_analysis() + HLO collective parsing feed §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --cells all --mesh both
+
+The PDES core itself is also dry-runnable as the pseudo-arch ``pdes-core``
+(ring of 2^20 PEs x 512 trials), proving the paper's own workload shards.
+"""
+import argparse
+import dataclasses
+import json
+import math
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, cell_is_runnable, get_config, get_shape
+from ..configs.base import SHAPES
+from ..distributed.sharding import (Parallelism, batch_pspecs, cache_pspecs,
+                                    param_pspecs, to_shardings)
+from ..launch import roofline as RL
+from ..launch.mesh import make_production_mesh
+from ..launch.specs import (abstract_cache, abstract_params, abstract_state,
+                            batch_specs)
+from ..optim.adamw import AdamWConfig
+from ..train.train_step import (make_decode_step, make_prefill_step,
+                                make_train_step, state_pspecs)
+
+
+def _parallelism(mesh, joint_batch: bool = False,
+                 serve: bool = False) -> Parallelism:
+    multi = "pod" in mesh.axis_names
+    return Parallelism(
+        mesh=mesh,
+        dp_axes=("pod", "data") if multi else ("data",),
+        fsdp_axis=None if serve else "data",
+        tp_axis="model",
+        joint_batch=joint_batch,
+        serve=serve,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True,
+               overrides: dict | None = None, joint_batch: bool | None = None):
+    """Returns (record dict, compiled or lowered)."""
+    shape = get_shape(shape_name)
+    cfg = get_config(arch)
+    if joint_batch is None:
+        # A5 profile measured as a net loss under current GSPMD (see
+        # EXPERIMENTS.md §Perf A5) — off by default, available via the flag.
+        joint_batch = False
+    par = _parallelism(mesh, joint_batch, serve=(shape.kind == "decode"))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        model, step = make_train_step(cfg, par, AdamWConfig())
+        state = abstract_state(model, cfg)
+        batch = batch_specs(cfg, shape)
+        st_specs = state_pspecs(state, par)
+        b_specs = batch_pspecs(batch, par)
+        in_sh = (to_shardings(st_specs, mesh), to_shardings(b_specs, mesh))
+        fn = jax.jit(step, in_shardings=in_sh,
+                     out_shardings=(in_sh[0], None), donate_argnums=0)
+        lowered = fn.lower(state, batch)
+    elif shape.kind == "prefill":
+        model, step = make_prefill_step(cfg, par)
+        params = abstract_params(model, cfg)
+        batch = batch_specs(cfg, shape)
+        p_specs = param_pspecs(params, par)
+        b_specs = batch_pspecs(batch, par)
+        in_sh = (to_shardings(p_specs, mesh), to_shardings(b_specs, mesh))
+        fn = jax.jit(step, in_shardings=in_sh)
+        lowered = fn.lower(params, batch)
+    else:  # decode
+        model, step = make_decode_step(cfg, par)
+        params = abstract_params(model, cfg)
+        cache = abstract_cache(model, cfg, shape)
+        batch = batch_specs(cfg, shape)
+        p_specs = param_pspecs(params, par)
+        c_specs = cache_pspecs(cache, par)
+        b_specs = batch_pspecs(batch, par)
+        in_sh = (to_shardings(p_specs, mesh), to_shardings(c_specs, mesh),
+                 to_shardings(b_specs["tokens"], mesh), None)
+        fn = jax.jit(step, in_shardings=in_sh,
+                     out_shardings=(None, to_shardings(c_specs, mesh)),
+                     donate_argnums=1)
+        lowered = fn.lower(params, cache, batch["tokens"],
+                           jax.ShapeDtypeStruct((), jnp.int32))
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": mesh.devices.size,
+        "lower_s": round(time.time() - t0, 1),
+    }
+    if not compile_:
+        return rec, lowered
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_gib": ma.argument_size_in_bytes / 2**30,
+        "output_gib": ma.output_size_in_bytes / 2**30,
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "alias_gib": ma.alias_size_in_bytes / 2**30,
+        "peak_gib": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30,
+    }
+    rl = RL.analyze(compiled, n_devices=mesh.devices.size,
+                    model_flops=RL.model_flops_for(cfg, shape))
+    rec["roofline"] = rl.to_dict()
+    return rec, compiled
+
+
+def run_cells(cells, meshes, out_dir: pathlib.Path, overrides=None):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    ok = fail = 0
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        for arch, shape in cells:
+            tag = f"{arch}__{shape}__{mesh_name}"
+            path = out_dir / f"{tag}.json"
+            if not cell_is_runnable(arch, shape):
+                path.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "mesh": mesh_name,
+                     "status": "skipped",
+                     "reason": "sub-quadratic rule (DESIGN.md §6)"}, indent=1))
+                print(f"[skip] {tag}")
+                continue
+            try:
+                rec, _ = lower_cell(arch, shape, mesh, overrides=overrides)
+                rec["status"] = "ok"
+                ok += 1
+                print(f"[ok]   {tag}  lower={rec['lower_s']}s "
+                      f"compile={rec.get('compile_s')}s "
+                      f"dom={rec['roofline']['dominant']}")
+            except Exception as e:  # noqa: BLE001 - record and continue
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                fail += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:200]}")
+            path.write_text(json.dumps(rec, indent=1))
+    print(f"done: {ok} ok, {fail} failed")
+    return fail
+
+
+def pdes_core_cell(mesh_name: str, out_dir: pathlib.Path):
+    """Dry-run the paper's own workload on the production mesh."""
+    from ..core.distributed import DistConfig, lower_sharded
+    from ..core.horizon import PDESConfig
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    multi = mesh_name == "multi"
+    cfg = PDESConfig(L=1 << 20, n_v=100, delta=100.0)
+    for mode in ("exact", "commavoid"):
+        dist = DistConfig(
+            ens_axes=("pod", "data") if multi else ("data",),
+            ring_axis="model", mode=mode, k_chunk=16)
+        from ..launch.hlo_cost import analyze_hlo
+        t0 = time.time()
+        lowered = lower_sharded(cfg, mesh, n_trials=512, n_steps=64, dist=dist)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        cost = analyze_hlo(compiled.as_text())     # trip-count aware
+        rec = {
+            "arch": "pdes-core", "mode": mode, "mesh": mesh_name,
+            "status": "ok", "compile_s": round(time.time() - t0, 1),
+            "L": cfg.L, "trials": 512, "steps": 64,
+            "flops_per_dev": cost.flops,
+            "bytes_per_dev": cost.bytes,
+            "coll_bytes_per_step": cost.coll_bytes / 64,
+            "coll_msgs_per_step": cost.coll_msgs / 64,
+            "collectives": dict(cost.coll),
+            "memory_temp_gib": ma.temp_size_in_bytes / 2**30,
+        }
+        (out_dir / f"pdes-core__{mode}__{mesh_name}.json").write_text(
+            json.dumps(rec, indent=1))
+        print(f"[ok]   pdes-core {mode} {mesh_name} "
+              f"coll/step={cost.coll_bytes / 64:.3g}B "
+              f"msgs/step={cost.coll_msgs / 64:.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--cells", default=None, help="'all' or 'arch:shape,...'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--pdes-core", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    if args.pdes_core:
+        for m in meshes:
+            pdes_core_cell(m, out)
+        return
+    if args.cells == "all":
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    elif args.cells:
+        cells = [tuple(c.split(":")) for c in args.cells.split(",")]
+    else:
+        cells = [(args.arch, args.shape)]
+    raise SystemExit(1 if run_cells(cells, meshes, out) else 0)
+
+
+if __name__ == "__main__":
+    main()

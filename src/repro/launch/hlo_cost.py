@@ -1,0 +1,379 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes
+it useless for scan-over-layers modules (verified in tests/test_roofline.py).
+This module re-derives flops / HBM bytes / collective bytes by parsing the
+optimized HLO, building the computation call graph, and multiplying loop-body
+costs by the ``known_trip_count`` backend_config XLA attaches after loop
+analysis.
+
+Accounting rules:
+* flops: 2·prod(result)·prod(contracting dims) per ``dot`` (propagated
+  through fusions, whiles and calls).  Elementwise flops are ignored — the
+  models here are dot-dominated, and the compute roofline term cares about
+  MXU work.
+* bytes: Σ(result + operand bytes) of every *top-level* op in a computation
+  (fusion internals never touch HBM, so fusion-called computations contribute
+  flops but not bytes).
+* collectives: result bytes (operand bytes for reduce-scatter) per op,
+  multiplied by enclosing loop trip counts; message counts tracked too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALLS = re.compile(r"(?:calls=|to_apply=|body=)%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count"?\s*[:=]\s*\{\s*"?n"?\s*[:=]\s*"?(\d+)')
+_OPCODE = re.compile(r"^(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+                     r"([a-z][a-z0-9\-]*)\(")
+
+COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+def _shape_elems_bytes(text: str):
+    total_b = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b
+
+
+def _dims_list(attr: str, name: str):
+    m = re.search(name + r"=\{([0-9,]*)\}", attr)
+    if not m or not m.group(1):
+        return []
+    return [int(x) for x in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_text: str
+    full_text: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    shapes: dict = dataclasses.field(default_factory=dict)      # name -> dims
+    shape_bytes: dict = dataclasses.field(default_factory=dict)  # name -> bytes
+    convert_src: dict = dataclasses.field(default_factory=dict)  # name -> src bytes
+
+
+def parse_computations(hlo: str) -> dict:
+    comps = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+            # header: [ENTRY] %name (params...) -> type {   (params may nest parens)
+            tok = line.strip().split()[0]
+            if tok == "ENTRY":
+                tok = line.strip().split()[1]
+            name = tok.lstrip("%").split("(")[0]
+            if name:
+                cur = Computation(name, [])
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        om = _OPCODE.match(rhs)
+        opcode = om.group(1) if om else rhs.split("(")[0].strip().split()[-1]
+        result_text = rhs[:rhs.find(opcode)] if opcode in rhs else rhs
+        cur.ops.append(Op(name, opcode, result_text, rhs))
+        sm = _SHAPE_RE.search(result_text)
+        if sm:
+            cur.shapes[name] = [int(x) for x in sm.group(2).split(",") if x]
+            cur.shape_bytes[name] = float(_shape_elems_bytes(result_text))
+    return comps
+
+
+def _dot_flops(op: Op, comp: "Computation") -> float:
+    """2 * prod(result dims) * prod(lhs contracting dim sizes)."""
+    result_b = _SHAPE_RE.findall(op.result_text)
+    if not result_b:
+        return 0.0
+    res_elems = 1
+    for d in result_b[0][1].split(","):
+        if d:
+            res_elems *= int(d)
+    # lhs shape: inline in args, or looked up from the producing op
+    args = op.full_text[op.full_text.find("(") + 1:]
+    first_arg = args.split(",")[0].strip()
+    lhs_m = _SHAPE_RE.search(first_arg)
+    if lhs_m:
+        lhs_dims = [int(x) for x in lhs_m.group(2).split(",") if x]
+    else:
+        lhs_dims = comp.shapes.get(first_arg.lstrip("%").rstrip(")"), None)
+        if lhs_dims is None:
+            return 2.0 * res_elems  # unknown K: floor at K=1
+    contract = _dims_list(op.full_text, "lhs_contracting_dims")
+    k = 1
+    for c in contract:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    return 2.0 * res_elems * k
+
+
+_SLICING_OPS = ("dynamic-slice", "slice", "gather")
+_NO_BYTES_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "while", "conditional", "call", "after-all",
+                 "iota", "partition-id", "replica-id")
+
+
+def _dims_bytes(dims, dt_bytes):
+    n = 1
+    for d in dims:
+        n *= d
+    return n * dt_bytes
+
+
+def _split_args(op: Op):
+    """Top-level operand names of an op (stripping inline shapes)."""
+    txt = op.full_text
+    start = txt.find("(")
+    depth = 0
+    args, cur = [], []
+    for ch in txt[start:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args.append("".join(cur).strip())
+                break
+        elif ch == "," and depth == 1:
+            args.append("".join(cur).strip())
+            cur = []
+            continue
+        cur.append(ch)
+    names = []
+    for a in args:
+        m = re.search(r"%([\w\.\-]+)\s*$", a)
+        names.append(m.group(1) if m else None)
+    return args, names
+
+
+def _operand_bytes(arg_text: str, name, comp: "Computation") -> float:
+    m = _SHAPE_RE.search(arg_text)
+    if m:
+        return _shape_elems_bytes(arg_text)
+    if name is not None and name in comp.shapes:
+        # dims only; dtype unknown from name — assume 4 bytes... instead look
+        # up the producing op's result text for dtype correctness
+        return comp.shape_bytes.get(name, 0.0)
+    return 0.0
+
+
+def _fusion_bytes(op: Op, comp: "Computation", comps: dict) -> float:
+    """Fusion interface traffic; slice-only-consumed params count slice bytes."""
+    b = _shape_elems_bytes(op.result_text)
+    fm = re.search(r"calls=%?([\w\.\-]+)", op.full_text)
+    called = comps.get(fm.group(1)) if fm else None
+    arg_texts, arg_names = _split_args(op)
+    if called is None:
+        for t, n in zip(arg_texts, arg_names):
+            b += _operand_bytes(t, n, comp)
+        return b
+    # map parameter index -> uses inside the fused computation
+    params = {}
+    for o in called.ops:
+        if o.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", o.full_text)
+            if pm:
+                params[int(pm.group(1))] = o.name
+    for i, (t, n) in enumerate(zip(arg_texts, arg_names)):
+        pname = params.get(i)
+        full = _operand_bytes(t, n, comp)
+        if pname is None:
+            b += full
+            continue
+        pat = re.compile(r"%" + re.escape(pname) + r"\b")
+        uses = [o for o in called.ops
+                if o.name != pname and pat.search(o.full_text)]
+        if uses and all(u.opcode in _SLICING_OPS for u in uses):
+            b += sum(_shape_elems_bytes(u.result_text) for u in uses)
+        else:
+            b += full
+    return b
+
+
+def _convert_only(op: Op, comps: dict) -> bool:
+    """True for CPU-inserted dtype-convert fusions (absent on TPU: the MXU
+    consumes/produces bf16 natively, so these round trips are artifacts of
+    compiling the dry-run for the host backend)."""
+    if op.opcode != "fusion":
+        return False
+    fm = re.search(r"calls=%?([\w\.\-]+)", op.full_text)
+    called = comps.get(fm.group(1)) if fm else None
+    if called is None:
+        return False
+    body = [o for o in called.ops if o.opcode != "parameter"]
+    return len(body) == 1 and body[0].opcode == "convert"
+
+
+def _op_bytes(op: Op, comp: "Computation", comps: dict) -> float:
+    """HBM traffic estimate for one top-level op."""
+    if op.opcode in _NO_BYTES_OPS:
+        return 0.0
+    if op.opcode == "fusion":
+        if _convert_only(op, comps):
+            return 0.0
+        return _fusion_bytes(op, comp, comps)
+    if op.opcode == "dot":
+        # count operands at their pre-convert dtype (TPU-native bf16 flow)
+        res = _shape_elems_bytes(op.result_text)
+        arg_texts, arg_names = _split_args(op)
+        total = res
+        for t, n in zip(arg_texts, arg_names):
+            b = _operand_bytes(t, n, comp)
+            src = comp.convert_src.get(n)
+            total += src if src is not None else b
+        return total
+    if op.opcode == "convert":
+        return 0.0
+    res = _shape_elems_bytes(op.result_text)
+    arg_texts, arg_names = _split_args(op)
+    if op.opcode in ("dynamic-slice", "slice"):
+        return 2.0 * res                      # read slice + write result
+    if op.opcode == "gather":
+        idx = _operand_bytes(arg_texts[1], arg_names[1], comp) \
+            if len(arg_texts) > 1 else 0.0
+        return 2.0 * res + idx
+    if op.opcode == "dynamic-update-slice":
+        upd = _operand_bytes(arg_texts[1], arg_names[1], comp) \
+            if len(arg_texts) > 1 else 0.0
+        return 2.0 * upd                      # in-place aliased update
+    if op.opcode == "scatter":
+        upd = _operand_bytes(arg_texts[-1], arg_names[-1], comp)
+        idx = _operand_bytes(arg_texts[1], arg_names[1], comp) \
+            if len(arg_texts) > 2 else 0.0
+        return 2.0 * upd + idx
+    return res + sum(_operand_bytes(t, n, comp)
+                     for t, n in zip(arg_texts, arg_names))
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLL_KINDS})
+    coll_msgs: float = 0.0
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m,
+                    {k: v * m for k, v in self.coll.items()},
+                    self.coll_msgs * m)
+
+    def add(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k in COLL_KINDS:
+            self.coll[k] += o.coll[k]
+        self.coll_msgs += o.coll_msgs
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def analyze_hlo(hlo: str, entry: str | None = None) -> Cost:
+    comps = parse_computations(hlo)
+    # post-pass: record convert-only fusions' source sizes for dot accounting
+    for comp in comps.values():
+        for op in comp.ops:
+            if _convert_only(op, comps):
+                arg_texts, arg_names = _split_args(op)
+                if arg_texts:
+                    comp.convert_src[op.name] = _operand_bytes(
+                        arg_texts[0], arg_names[0], comp)
+    memo: dict[str, Cost] = {}
+    # entry computation: the one named in "ENTRY %name" line
+    em = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    entry = entry or (em.group(1) if em else next(iter(comps)))
+
+    def comp_cost(name: str, count_bytes: bool) -> Cost:
+        key = f"{name}|{count_bytes}"
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()          # break cycles defensively
+        c = Cost()
+        comp = comps.get(name)
+        if comp is None:
+            return c
+        for op in comp.ops:
+            if op.opcode == "dot":
+                c.flops += _dot_flops(op, comp)
+            kind = next((k for k in COLL_KINDS
+                         if op.opcode == k or op.opcode == k + "-start"), None)
+            if kind:
+                if kind == "reduce-scatter":
+                    args = op.full_text[op.full_text.find("("):]
+                    c.coll[kind] += _shape_elems_bytes(args)
+                else:
+                    c.coll[kind] += _shape_elems_bytes(op.result_text)
+                c.coll_msgs += 1
+            if count_bytes:
+                c.bytes += _op_bytes(op, comp, comps)
+            # propagate into called computations
+            if op.opcode == "while":
+                trips = 1.0
+                tm = _TRIP.search(op.full_text)
+                if tm:
+                    trips = float(tm.group(1))
+                bm = re.search(r"body=%?([\w\.\-]+)", op.full_text)
+                if bm:
+                    c.add(comp_cost(bm.group(1), count_bytes).scaled(trips))
+                cm = _COND.search(op.full_text)
+                if cm:
+                    c.add(comp_cost(cm.group(1), False).scaled(trips))
+            elif op.opcode in ("fusion",):
+                fm = re.search(r"calls=%?([\w\.\-]+)", op.full_text)
+                if fm:
+                    # fusion internals: flops yes, HBM bytes no
+                    c.add(comp_cost(fm.group(1), False))
+            elif op.opcode in ("call", "async-start"):
+                fm = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", op.full_text)
+                if fm:
+                    c.add(comp_cost(fm.group(1), count_bytes))
+            elif op.opcode == "conditional":
+                for br in re.findall(r"branch_computations=\{([^}]*)\}",
+                                     op.full_text):
+                    for b in br.split(","):
+                        c.add(comp_cost(b.strip().lstrip("%"), count_bytes))
+        memo[key] = c
+        return c
+
+    return comp_cost(entry, True)

@@ -1,0 +1,136 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN.md §7).
+
+    compute  = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory   = HLO_bytes_per_device / HBM_BW
+    collect. = collective_bytes_per_device / ICI_BW
+
+cost_analysis() provides per-device FLOPs/bytes of the SPMD module.
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO and sum
+operand/result sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (shapes in the SPMD module are already
+per-device shard shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops that appear in HLO with these prefixes, including -start variants
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind result-shape bytes of collective ops in an (SPMD) HLO module.
+
+    Result shapes approximate the per-device payload: exact for all-reduce
+    and collective-permute, ~the moved volume for all-gather (result spans
+    the gathered tensor); reduce-scatter counts operand shapes instead.
+    ``-done`` halves of async pairs are skipped to avoid double counting.
+    """
+    out = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        post = line.split(" = ", 1)[1]
+        op_pos = post.find(kind)
+        result_text = post[:op_pos]
+        if kind == "reduce-scatter":
+            b = _shape_bytes(post[op_pos:])       # operand shapes in the args
+        else:
+            b = _shape_bytes(result_text)
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    coll_detail: dict
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, n_devices: int, model_flops: float) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    FLOPs/bytes/collectives come from the trip-count-aware HLO analysis
+    (hlo_cost.analyze_hlo) because XLA's cost_analysis counts while bodies
+    once (verified in tests/test_roofline.py); the raw cost_analysis values
+    are kept in coll_detail as a cross-check.
+    """
+    from .hlo_cost import analyze_hlo
+    txt = compiled.as_text()
+    cost = analyze_hlo(txt)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = cost.flops
+    byts = cost.bytes
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = byts / HBM_BW
+    t_x = cost.coll_bytes / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    useful = model_flops / (flops * n_devices) if flops else 0.0
+    return Roofline(
+        flops_per_dev=flops, bytes_per_dev=byts,
+        coll_bytes_per_dev=cost.coll_bytes,
+        compute_s=t_c, memory_s=t_m, collective_s=t_x, dominant=dom,
+        model_flops=model_flops, useful_ratio=useful,
+        coll_detail=dict(cost.coll, msgs=cost.coll_msgs,
+                         xla_flops_body_once=float(ca.get("flops", -1.0)),
+                         xla_bytes_body_once=float(ca.get("bytes accessed", -1.0))),
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train / 2·N·D prefill / 2·N·B decode (per step)."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch      # decode: one token per lane

@@ -1,0 +1,69 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) cell.
+
+No device allocation: train states and KV caches are built with
+jax.eval_shape against the model's own init/cache constructors, so the
+dry-run lowers exactly what the real launcher would execute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import build_model
+
+WHISPER_ENC_LEN = 1536    # stub frontend frames for decode cells (~30 s audio)
+
+
+def _cd(cfg: ModelConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.compute_dtype]
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Model inputs for one step of the given kind."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = sds((B, S), jnp.int32)
+    if shape.kind in ("train",):
+        if cfg.family == "encdec":
+            return {"enc_embeddings": sds((B, S, cfg.d_model), _cd(cfg)),
+                    "tokens": tok, "labels": tok}
+        if cfg.input_mode == "embeddings":
+            return {"embeddings": sds((B, S, cfg.d_model), _cd(cfg)),
+                    "labels": tok}
+        return {"tokens": tok, "labels": tok}
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"enc_embeddings": sds((B, S, cfg.d_model), _cd(cfg))}
+        if cfg.input_mode == "embeddings":
+            return {"embeddings": sds((B, S, cfg.d_model), _cd(cfg))}
+        return {"tokens": tok}
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def abstract_params(model, cfg: ModelConfig):
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def abstract_cache(model, cfg: ModelConfig, shape: ShapeConfig):
+    """KV/SSM cache avals for decode cells."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        return jax.eval_shape(lambda: model.init_cache(B))
+    if cfg.family == "hybrid":
+        return jax.eval_shape(lambda: model.init_cache(B, S))
+    if cfg.family == "encdec":
+        return jax.eval_shape(
+            lambda: model.init_cache(B, S, WHISPER_ENC_LEN))
+    return jax.eval_shape(lambda: model.cache_spec(B, S))
+
+
+def abstract_state(model, cfg: ModelConfig):
+    from ..train.train_step import init_train_state
+    return jax.eval_shape(lambda k: init_train_state(model, k),
+                          jax.random.key(0))

@@ -1,0 +1,5 @@
+"""Model zoo: dense/SWA/MoE decoders, Mamba2 SSM, hybrid, encoder-decoder."""
+from .model import build_model, SSMModel  # noqa: F401
+from .transformer import DecoderModel      # noqa: F401
+from .hybrid import HybridModel            # noqa: F401
+from .encdec import EncDecModel            # noqa: F401

@@ -1,0 +1,239 @@
+"""Flash attention with a custom VJP (no O(S²) residuals).
+
+jax.grad of the scan-based blockwise attention saves every (qb × kb)
+probability tile for the backward pass — the dry-run showed f32
+[nq, nk, B, KH, G, qb, kb] temporaries dominating both HBM traffic and peak
+memory (EXPERIMENTS.md §Perf, iteration L1).  This module implements the
+standard flash backward instead:
+
+* forward saves only (q, k, v, out, lse) — O(S·D);
+* backward recomputes tiles in two passes:
+    pass A: per q-block  -> dq   (inner scan over kv blocks)
+    pass B: per kv-block -> dk,dv (inner scan over q blocks)
+  Two recompute passes trade ~1.4× extra attention FLOPs for removing all
+  large carries — on TPU the compute term is far from the roof while memory
+  dominates, so this is the right trade (hypothesis/measurement in §Perf).
+
+Supports causal masking, sliding windows (O(S·window) via slab slicing),
+GQA, and gemma-2 logit soft-capping.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1.0e30
+
+
+def _mask(qpos, kpos, causal, window):
+    m = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), bool)
+    if causal:
+        m &= qpos >= kpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def _scores(qblk, kblk, scale, softcap):
+    """(B,qb,KH,G,D) x (B,kb,KH,D) -> f32 (B,KH,G,qb,kb); returns (s, gate)
+    where gate is d(s)/d(s_hat) for the softcap chain (None if no cap)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is None:
+        return s, None
+    t = jnp.tanh(s / softcap)
+    return softcap * t, (1.0 - t * t)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    q_block=512, k_block=512, q_offset=0):
+    """q: (B,Sq,H,D); k/v: (B,Sk,KH,D) -> (B,Sq,H,D)."""
+    out, _ = _fwd(q, k, v, causal, window, softcap, q_block, k_block, q_offset)
+    return out
+
+
+def _fwd(q, k, v, causal, window, softcap, q_block, k_block, q_offset):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    KH = k.shape[2]
+    G = H // KH
+    qb = min(q_block, Sq)
+    kb = min(k_block, Sk)
+    nq = Sq // qb
+    scale = D ** -0.5
+    qg = q.reshape(B, Sq, KH, G, D)
+    use_slab = window is not None and causal and Sk > window + qb
+    slab = min(Sk, -(-(window + qb) // kb) * kb) if use_slab else Sk
+    nk = slab // kb
+    masked = causal or window is not None     # W3: skip selects when all-True
+    iq = jnp.arange(qb)
+    ik = jnp.arange(kb)
+
+    def per_q(qi):
+        qblk = lax.dynamic_slice_in_dim(qg, qi * qb, qb, axis=1)
+        if use_slab:
+            start = jnp.clip(q_offset + (qi + 1) * qb - slab, 0, Sk - slab)
+        else:
+            start = 0
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k0 = start + kj * kb
+            kblk = lax.dynamic_slice_in_dim(k, k0, kb, axis=1)
+            vblk = lax.dynamic_slice_in_dim(v, k0, kb, axis=1)
+            s, _ = _scores(qblk, kblk, scale, softcap)
+            if masked:
+                qpos = q_offset + qi * qb + iq[:, None]
+                kpos = k0 + ik[None, :]
+                msk = _mask(qpos, kpos, causal, window)
+                s = jnp.where(msk, s, NEG_INF)
+                m2 = jnp.max(s, axis=-1)
+                p = jnp.where(msk, jnp.exp(s - m2[..., None]), 0.0)
+            else:
+                m2 = jnp.max(s, axis=-1)
+                p = jnp.exp(s - m2[..., None])
+            l2 = jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            m_new = jnp.maximum(m, m2)
+            a1, a2 = jnp.exp(m - m_new), jnp.exp(m2 - m_new)
+            return (m_new, l * a1 + l2 * a2,
+                    acc * a1[..., None] + pv * a2[..., None]), None
+
+        m0 = jnp.full((B, KH, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, qb, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        o = acc / jnp.maximum(l, 1e-37)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-37))
+        return (o.transpose(0, 3, 1, 2, 4).reshape(B, qb, H, D).astype(q.dtype),
+                lse)
+
+    outs, lses = lax.map(per_q, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KH, G, Sq)  # (nq,B,KH,G,qb)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, softcap, q_block, k_block, q_offset, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    KH = k.shape[2]
+    G = H // KH
+    qb = min(q_block, Sq)
+    kb = min(k_block, Sk)
+    nq, nk_full = Sq // qb, Sk // kb
+    scale = D ** -0.5
+    qg = q.reshape(B, Sq, KH, G, D)
+    dog = dout.reshape(B, Sq, KH, G, D)
+    og = out.reshape(B, Sq, KH, G, D)
+    # delta_i = sum_d dout_i * out_i  (flash backward row term)
+    delta = jnp.einsum("bshgd,bshgd->bhgs", dog.astype(jnp.float32),
+                       og.astype(jnp.float32))
+    use_slab = window is not None and causal and Sk > window + qb
+    slab = min(Sk, -(-(window + qb) // kb) * kb) if use_slab else Sk
+    nk = slab // kb if use_slab else nk_full
+    masked = causal or window is not None     # W3: skip selects when all-True
+    iq = jnp.arange(qb)
+    ik = jnp.arange(kb)
+
+    def tile_grads(qblk, kblk, vblk, lse_blk, delta_blk, do_blk, qpos, kpos):
+        """Recompute p and return (ds_hat f32 (B,KH,G,qb,kb), p)."""
+        s, gate = _scores(qblk, kblk, scale, softcap)
+        if masked:
+            msk = _mask(qpos, kpos, causal, window)
+            p = jnp.where(msk, jnp.exp(s - lse_blk[..., None]), 0.0)
+        else:
+            p = jnp.exp(s - lse_blk[..., None])
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_blk, vblk,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_blk[..., None])
+        if gate is not None:
+            ds = ds * gate
+        return ds, p
+
+    # ---- pass A: dq per q block ----
+    def per_q(qi):
+        qblk = lax.dynamic_slice_in_dim(qg, qi * qb, qb, axis=1)
+        do_blk = lax.dynamic_slice_in_dim(dog, qi * qb, qb, axis=1)
+        lse_blk = lax.dynamic_slice_in_dim(lse, qi * qb, qb, axis=3)
+        delta_blk = lax.dynamic_slice_in_dim(delta, qi * qb, qb, axis=3)
+        start = jnp.clip(q_offset + (qi + 1) * qb - slab, 0, Sk - slab) \
+            if use_slab else 0
+
+        def kv_step(dq, kj):
+            k0 = start + kj * kb
+            kblk = lax.dynamic_slice_in_dim(k, k0, kb, axis=1)
+            vblk = lax.dynamic_slice_in_dim(v, k0, kb, axis=1)
+            qpos = q_offset + qi * qb + iq[:, None]
+            kpos = k0 + ik[None, :]
+            ds, _ = tile_grads(qblk, kblk, vblk, lse_blk, delta_blk, do_blk,
+                               qpos, kpos)
+            dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds.astype(kblk.dtype),
+                                 kblk, preferred_element_type=jnp.float32)
+            return dq, None
+
+        dq0 = jnp.zeros((B, qb, KH, G, D), jnp.float32)
+        dq, _ = lax.scan(kv_step, dq0, jnp.arange(nk))
+        return (dq * scale).astype(q.dtype)
+
+    dqs = lax.map(per_q, jnp.arange(nq))             # (nq, B, qb, KH, G, D)
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, D)
+
+    # ---- pass B: dk, dv per kv block ----
+    # q range attending to kv block j: [j*kb, j*kb + window + qb) for SWA,
+    # else all q blocks (masked).
+    if use_slab:
+        nq_b = -(-(window + kb) // qb)            # ceil; edges masked
+        q_slab = min(Sq, nq_b * qb)
+        nq_b = q_slab // qb
+    else:
+        q_slab, nq_b = Sq, nq
+
+    def per_k(kj):
+        k0 = kj * kb
+        kblk = lax.dynamic_slice_in_dim(k, k0, kb, axis=1)
+        vblk = lax.dynamic_slice_in_dim(v, k0, kb, axis=1)
+        qstart = jnp.clip(k0 - q_offset, 0, Sq - q_slab) if use_slab else 0
+
+        def q_step(carry, qi):
+            dk, dv = carry
+            qpos0 = qstart + qi * qb
+            qblk = lax.dynamic_slice_in_dim(qg, qpos0, qb, axis=1)
+            do_blk = lax.dynamic_slice_in_dim(dog, qpos0, qb, axis=1)
+            lse_blk = lax.dynamic_slice_in_dim(lse, qpos0, qb, axis=3)
+            delta_blk = lax.dynamic_slice_in_dim(delta, qpos0, qb, axis=3)
+            qpos = q_offset + qpos0 + iq[:, None]
+            kpos = k0 + ik[None, :]
+            ds, p = tile_grads(qblk, kblk, vblk, lse_blk, delta_blk, do_blk,
+                               qpos, kpos)
+            dk = dk + jnp.einsum("bhgqk,bqhgd->bkhd", ds.astype(qblk.dtype),
+                                 qblk, preferred_element_type=jnp.float32)
+            dv = dv + jnp.einsum("bhgqk,bqhgd->bkhd", p.astype(do_blk.dtype),
+                                 do_blk, preferred_element_type=jnp.float32)
+            return (dk, dv), None
+
+        dk0 = jnp.zeros((B, kb, KH, D), jnp.float32)
+        dv0 = jnp.zeros((B, kb, KH, D), jnp.float32)
+        (dk, dv), _ = lax.scan(q_step, (dk0, dv0), jnp.arange(nq_b))
+        return (dk * scale).astype(k.dtype), dv.astype(v.dtype)
+
+    dks, dvs = lax.map(per_k, jnp.arange(nk_full))   # (nk, B, kb, KH, D)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KH, D)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KH, D)
+    return dq, dk, dv
+
+
+def _fwd_rule(q, k, v, causal, window, softcap, q_block, k_block, q_offset):
+    out, res = _fwd(q, k, v, causal, window, softcap, q_block, k_block,
+                    q_offset)
+    return out, res
+
+
+flash_attention.defvjp(_fwd_rule, _bwd)

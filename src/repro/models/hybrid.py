@@ -1,0 +1,180 @@
+"""Hybrid SSM + shared-attention model (zamba2 family).
+
+Backbone: a stack of Mamba2 blocks.  After every ``hybrid_period`` SSM layers
+a *shared* transformer block (one weight set reused at every application, as
+in Zamba/Zamba2) runs on ``proj([hidden ; original_embedding])`` — the concat
+re-injects the token embedding at depth, per the Zamba design; the block's
+delta (its attention+FFN contribution) is added back to the residual stream.
+We simplify the released model's per-application LoRA deltas away (noted in
+DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init, embed_init, embed_lookup
+from .ssm import ssm_apply, ssm_decode_step, ssm_init
+from .transformer import (Constrain, _dt, _noop, _norm, _norm_init, _remat,
+                          attn_prefill_kv, chunked_ce, layer_apply,
+                          layer_decode, layer_init)
+from typing import TYPE_CHECKING
+if TYPE_CHECKING:  # avoid circular import; hints only
+    from ..configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class HybridModel:
+    cfg: ModelConfig
+    constrain: Constrain = _noop
+
+    @property
+    def n_shared(self) -> int:
+        return self.cfg.n_layers // self.cfg.hybrid_period
+
+    def init(self, key):
+        cfg = self.cfg
+        pd = _dt(cfg.param_dtype)
+        k_emb, k_ssm, k_shared, k_proj = jax.random.split(key, 4)
+        ssm_keys = jax.random.split(k_ssm, cfg.n_layers).reshape(
+            self.n_shared, cfg.hybrid_period)
+
+        def one_ssm(k):
+            return {"norm": _norm_init(cfg, pd),
+                    "ssm": ssm_init(k, cfg.ssm, pd)}
+
+        return {
+            "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, pd),
+            "ssm_layers": jax.vmap(jax.vmap(one_ssm))(ssm_keys),
+            "shared": layer_init(k_shared, cfg, pd),          # one weight set
+            "shared_in": dense_init(k_proj, 2 * cfg.d_model, (cfg.d_model,), pd),
+            "final_norm": _norm_init(cfg, pd),
+        }
+
+    def _cast(self, params, cd):
+        return jax.tree.map(
+            lambda a: a.astype(cd) if a.dtype == jnp.float32 and a.ndim > 1
+            else a, params)
+
+    def _shared_delta(self, params, x, emb0, positions, cd):
+        """Shared block contribution on proj([x ; emb0])."""
+        cfg = self.cfg
+        xin = jnp.concatenate([x, emb0], axis=-1) @ params["shared_in"].astype(cd)
+        out, _ = layer_apply(xin, params["shared"], cfg, kind="full",
+                             constrain=self.constrain, positions=positions)
+        return out - xin
+
+    # ---- train ----
+    def loss(self, params, batch):
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        params = self._cast(params, cd)
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+        x = self.constrain(x, "act")
+        emb0 = x
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+
+        def group_body(x, gparams):
+            for j in range(cfg.hybrid_period):
+                pj = jax.tree.map(lambda a: a[j], gparams)
+                h, _ = ssm_apply(_norm(x, pj["norm"], cfg), pj["ssm"], cfg.ssm, cd)
+                x = self.constrain(x + h, "act")
+            x = x + self._shared_delta(params, x, emb0, positions, cd)
+            return self.constrain(x, "act"), None
+
+        body = _remat(group_body, cfg.remat)
+        x, _ = lax.scan(lambda c, xs: body(c, xs), x, params["ssm_layers"])
+        x = _norm(x, params["final_norm"], cfg)
+        nll, n = chunked_ce(x, params["embed"]["table"], batch["labels"], cfg,
+                            self.constrain)
+        loss = nll / jnp.maximum(n, 1)
+        return loss, {"nll": loss}
+
+    # ---- serve ----
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        s = cfg.ssm
+        G, R, B = self.n_shared, cfg.hybrid_period, batch_size
+        return {
+            "ssm": {
+                "ssm": jnp.zeros((G, R, B, s.n_heads, s.head_dim, s.d_state),
+                                 jnp.float32),
+                "conv": jnp.zeros((G, R, B, s.d_conv - 1, s.conv_dim), cd),
+            },
+            "k": jnp.zeros((G, B, max_len, cfg.n_kv_heads, cfg.head_dim), cd),
+            "v": jnp.zeros((G, B, max_len, cfg.n_kv_heads, cfg.head_dim), cd),
+        }
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        params = self._cast(params, cd)
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+        emb0 = x
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+
+        def group_body(x, gparams):
+            new_ssm = []
+            for j in range(cfg.hybrid_period):
+                pj = jax.tree.map(lambda a: a[j], gparams)
+                h, c = ssm_apply(_norm(x, pj["norm"], cfg), pj["ssm"], cfg.ssm, cd)
+                new_ssm.append(c)
+                x = x + h
+            xin = jnp.concatenate([x, emb0], axis=-1) \
+                @ params["shared_in"].astype(cd)
+            xn = _norm(xin, params["shared"]["ln1"], cfg)
+            k, v = attn_prefill_kv(xn, params["shared"]["attn"], cfg, cd,
+                                   self.constrain, positions)
+            out, _ = layer_apply(xin, params["shared"], cfg, kind="full",
+                                 constrain=self.constrain, positions=positions)
+            x = x + (out - xin)
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_ssm)
+            return x, (stacked, k, v)
+
+        x, (ssm_caches, ks, vs) = lax.scan(
+            lambda c, xs: group_body(c, xs), x, params["ssm_layers"])
+        x = _norm(x, params["final_norm"], cfg)
+        logits = jnp.einsum(
+            "bd,vd->bv", x[:, -1], params["embed"]["table"].astype(cd),
+            preferred_element_type=jnp.float32)[:, :cfg.vocab_size]
+        cache = {"ssm": ssm_caches, "k": ks, "v": vs}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        params = self._cast(params, cd)
+        x = embed_lookup(params["embed"], tokens, cd)       # (B,1,d)
+        emb0 = x
+
+        def group_body(x, inputs):
+            gparams, gcache = inputs
+            new_ssm = []
+            for j in range(cfg.hybrid_period):
+                pj = jax.tree.map(lambda a: a[j], gparams)
+                cj = jax.tree.map(lambda a: a[j], gcache["ssm"])
+                h, cj2 = ssm_decode_step(
+                    _norm(x, pj["norm"], cfg)[:, 0], cj, pj["ssm"], cfg.ssm, cd)
+                new_ssm.append(cj2)
+                x = x + h[:, None, :]
+            xin = jnp.concatenate([x, emb0], axis=-1) \
+                @ params["shared_in"].astype(cd)
+            out, ck, cv = layer_decode(xin, params["shared"], cfg, gcache["k"],
+                                       gcache["v"], pos, kind="full",
+                                       constrain=self.constrain)
+            x = x + (out - xin)
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_ssm)
+            return x, {"ssm": stacked, "k": ck, "v": cv}
+
+        x, new_cache = lax.scan(group_body, x, (params["ssm_layers"], cache))
+        x = _norm(x, params["final_norm"], cfg)
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, params["embed"]["table"].astype(cd),
+            preferred_element_type=jnp.float32)[:, 0, :cfg.vocab_size]
+        return logits, new_cache

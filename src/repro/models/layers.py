@@ -1,0 +1,158 @@
+"""Shared neural-net layers (pure JAX, no framework deps).
+
+Parameters are plain pytrees (nested dicts of jnp arrays); init functions
+mirror apply functions.  Compute dtype and parameter dtype are decoupled
+(mixed-precision policy lives in the config).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _he(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def dense_init(key, in_dim, out_shape, dtype, scale=None):
+    """Weight (in_dim, *out_shape); fan-in normal init."""
+    return _he(key, (in_dim, *out_shape), dtype, scale)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(x, params, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(x, params, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    x = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return x.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary / sinusoidal position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim, theta):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                        # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos, d, dtype=jnp.float32):
+    """Transformer sinusoidal table (used by the whisper encoder)."""
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x, cap):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d, f, dtype, gated=True, bias=False):
+    ks = jax.random.split(key, 4)
+    p = {"wi": dense_init(ks[0], d, (f,), dtype),
+         "wo": dense_init(ks[1], f, (d,), dtype)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d, (f,), dtype)
+    if bias:
+        p["bi"] = jnp.zeros((f,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp(x, params, act, compute_dtype, constrain=None):
+    """x: (..., d) -> (..., d).  constrain: optional fn applied to the hidden."""
+    w = lambda n: params[n].astype(compute_dtype)
+    h = x @ w("wi")
+    if "bi" in params:
+        h = h + w("bi")
+    h = act_fn(act)(h)
+    if "wg" in params:
+        h = h * (x @ w("wg"))
+    if constrain is not None:
+        h = constrain(h)
+    out = h @ w("wo")
+    if "bo" in params:
+        out = out + w("bo")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def pad_vocab(v, multiple=128):
+    return -(-v // multiple) * multiple
+
+
+def embed_init(key, vocab, d, dtype, pad_to=128):
+    vp = pad_vocab(vocab, pad_to)
+    return {"table": (jax.random.normal(key, (vp, d)) * 0.02).astype(dtype)}
+
+
+def embed_lookup(params, tokens, compute_dtype, scale_by_sqrt_d=False):
+    t = params["table"].astype(compute_dtype)
+    x = jnp.take(t, tokens, axis=0)
+    if scale_by_sqrt_d:
+        x = x * jnp.asarray(math.sqrt(t.shape[-1]), compute_dtype)
+    return x

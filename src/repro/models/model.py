@@ -1,0 +1,121 @@
+"""Model factory: family -> model class, plus the pure-SSM decoder."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .encdec import EncDecModel
+from .hybrid import HybridModel
+from .layers import embed_init, embed_lookup
+from .ssm import ssm_apply, ssm_decode_step, ssm_init
+from .transformer import (Constrain, DecoderModel, _dt, _noop, _norm,
+                          _norm_init, _remat, chunked_ce)
+from typing import TYPE_CHECKING
+if TYPE_CHECKING:  # avoid circular import; hints only
+    from ..configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class SSMModel:
+    """Attention-free Mamba2 decoder (mamba2-130m family)."""
+
+    cfg: ModelConfig
+    constrain: Constrain = _noop
+
+    def init(self, key):
+        cfg = self.cfg
+        pd = _dt(cfg.param_dtype)
+        k_emb, k_layers = jax.random.split(key)
+        keys = jax.random.split(k_layers, cfg.n_layers)
+
+        def one(k):
+            return {"norm": _norm_init(cfg, pd), "ssm": ssm_init(k, cfg.ssm, pd)}
+
+        return {
+            "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, pd),
+            "layers": jax.vmap(one)(keys),
+            "final_norm": _norm_init(cfg, pd),
+        }
+
+    def _cast(self, params, cd):
+        return jax.tree.map(
+            lambda a: a.astype(cd) if a.dtype == jnp.float32 and a.ndim > 1
+            else a, params)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        params = self._cast(params, cd)
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+        x = self.constrain(x, "act")
+
+        def body(x, p):
+            h, _ = ssm_apply(_norm(x, p["norm"], cfg), p["ssm"], cfg.ssm, cd)
+            return self.constrain(x + h, "act"), None
+
+        x, _ = lax.scan(lambda c, p: _remat(body, cfg.remat)(c, p),
+                        x, params["layers"])
+        x = _norm(x, params["final_norm"], cfg)
+        nll, n = chunked_ce(x, params["embed"]["table"], batch["labels"], cfg,
+                            self.constrain)
+        loss = nll / jnp.maximum(n, 1)
+        return loss, {"nll": loss}
+
+    def init_cache(self, batch_size: int):
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        s = cfg.ssm
+        return {
+            "ssm": jnp.zeros((cfg.n_layers, batch_size, s.n_heads, s.head_dim,
+                              s.d_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch_size, s.d_conv - 1,
+                               s.conv_dim), cd),
+        }
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        params = self._cast(params, cd)
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+
+        def body(x, p):
+            h, c = ssm_apply(_norm(x, p["norm"], cfg), p["ssm"], cfg.ssm, cd)
+            return x + h, c
+
+        x, cache = lax.scan(body, x, params["layers"])
+        x = _norm(x, params["final_norm"], cfg)
+        logits = jnp.einsum(
+            "bd,vd->bv", x[:, -1], params["embed"]["table"].astype(cd),
+            preferred_element_type=jnp.float32)[:, :cfg.vocab_size]
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        params = self._cast(params, cd)
+        x = embed_lookup(params["embed"], tokens, cd)[:, 0]   # (B, d)
+
+        def body(x, inputs):
+            p, c = inputs
+            h, c2 = ssm_decode_step(_norm(x, p["norm"], cfg), c, p["ssm"],
+                                    cfg.ssm, cd)
+            return x + h, c2
+
+        x, new_cache = lax.scan(body, x, (params["layers"], cache))
+        x = _norm(x, params["final_norm"], cfg)
+        logits = (x @ params["embed"]["table"].astype(cd).T
+                  ).astype(jnp.float32)[:, :cfg.vocab_size]
+        return logits, new_cache
+
+
+def build_model(cfg: ModelConfig, constrain: Constrain = _noop):
+    return {
+        "dense": DecoderModel,
+        "moe": DecoderModel,
+        "ssm": SSMModel,
+        "hybrid": HybridModel,
+        "encdec": EncDecModel,
+    }[cfg.family](cfg, constrain)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN: top-k routing with per-sequence capacity dispatch.
+
+Dispatch/combine are *token-local per batch row* (gather/scatter against an
+(E, C) slot table built from a cumulative-position router), so no token ever
+crosses a data shard: the only collectives MoE adds are the FSDP/TP param
+movements, not token all-to-alls.  Expert weights shard d_ff over the tensor
+axis ("TP-MoE"), which is the right regime when per-device token counts are
+modest; an EP/all-to-all alternative is explored in §Perf for arctic.
+
+Aux losses: switch-style load-balance loss and router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import act_fn, dense_init
+
+
+class MoESpec(NamedTuple):
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic: parallel dense FFN branch
+
+
+def moe_init(key, d, f, spec: MoESpec, dtype, gated=True):
+    ks = jax.random.split(key, 4)
+    E = spec.n_experts
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, (E,), jnp.float32),  # router in f32
+        "wi": (jax.random.normal(ks[1], (E, d, f)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[2], (E, f, d)) / math.sqrt(f)).astype(dtype),
+    }
+    if gated:
+        p["wg"] = (jax.random.normal(ks[3], (E, d, f)) * scale).astype(dtype)
+    return p
+
+
+def capacity(seq_len: int, spec: MoESpec) -> int:
+    return max(1, math.ceil(seq_len * spec.top_k * spec.capacity_factor
+                            / spec.n_experts))
+
+
+def moe_apply(x, params, spec: MoESpec, *, act="silu", compute_dtype=jnp.bfloat16,
+              constrain_hidden=None, constrain_in=None, constrain_out=None):
+    """x: (B, S, d) -> (out (B, S, d), aux dict with lb_loss / z_loss).
+
+    Routing and slot assignment are per batch row; tokens beyond an expert's
+    capacity are dropped (standard switch behavior, capacity_factor slack).
+    """
+    B, S, d = x.shape
+    E, k = spec.n_experts, spec.top_k
+    C = capacity(S, spec)
+    w = lambda n: params[n].astype(compute_dtype)
+
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(logits, k)               # (B,S,k)
+    gate = jax.nn.softmax(top_vals, axis=-1)                   # renormalized
+
+    # ---- aux losses (computed on the full router distribution) ----
+    me = jnp.mean(probs, axis=(0, 1))                              # (E,)
+    assign_onehot = jax.nn.one_hot(top_idx[..., 0], E)             # top-1 fraction
+    ce = jnp.mean(assign_onehot, axis=(0, 1))
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- slot assignment: position of each (token, k) within its expert ----
+    # sort-based (§Perf A1): the one-hot cumsum builds a (B, S·k, E) int32
+    # tensor — 67 GB/device for arctic train_4k.  argsort + searchsorted
+    # computes identical positions with O(B·S·k) memory.
+    e_flat = top_idx.reshape(B, S * k)                             # token-major
+    order = jnp.argsort(e_flat, axis=-1, stable=True)              # (B,S*k)
+    sorted_e = jnp.take_along_axis(e_flat, order, axis=-1)
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="left"))(
+        sorted_e)                                                   # (B,E)
+    pos_sorted = jnp.arange(S * k)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1)
+    inv_order = jnp.argsort(order, axis=-1)
+    slot = jnp.take_along_axis(pos_sorted, inv_order, axis=-1)
+    keep = slot < C
+    slot = jnp.where(keep, slot, C)                                # overflow slot
+
+    # ---- dispatch: (E, C+1) slot table of source-token indices ----
+    tok_idx = jnp.broadcast_to(
+        (jnp.arange(S)[:, None]).reshape(1, S, 1), (B, S, k)).reshape(B, S * k)
+
+    def build_table(e_row, s_row, t_row):
+        tbl = jnp.full((E, C + 1), S, jnp.int32)                   # S -> zero row
+        return tbl.at[e_row, s_row].set(t_row, mode="drop")
+
+    table = jax.vmap(build_table)(e_flat, slot, tok_idx)           # (B,E,C+1)
+    xp = jnp.concatenate(
+        [x, jnp.zeros((B, 1, d), x.dtype)], axis=1)                # zero pad row
+    expert_in = jnp.take_along_axis(
+        xp[:, None, :, :], table[..., :C, None], axis=2)           # (B,E,C,d)
+    if constrain_in is not None:
+        expert_in = constrain_in(expert_in)        # EP dispatch all-to-all
+
+    # ---- expert FFN (batched over E; d_ff TP-sharded by the caller) ----
+    h = jnp.einsum("becd,edf->becf", expert_in, w("wi"))
+    h = act_fn(act)(h)
+    if "wg" in params:
+        h = h * jnp.einsum("becd,edf->becf", expert_in, w("wg"))
+    if constrain_hidden is not None:
+        h = constrain_hidden(h)
+    out_e = jnp.einsum("becf,efd->becd", h, w("wo"))               # (B,E,C,d)
+    if constrain_out is not None:
+        # EP combine: all-to-all expert outputs back to batch-major layout
+        out_e = constrain_out(out_e)
+
+    # ---- combine: gather each assignment's result, weight, and sum over k ----
+    out_flat = jnp.concatenate(
+        [out_e, jnp.zeros((B, E, 1, d), out_e.dtype)], axis=2
+    ).reshape(B, E * (C + 1), d)
+    gather_idx = e_flat * (C + 1) + slot                           # (B,S*k)
+    vals = jnp.take_along_axis(out_flat, gather_idx[..., None], axis=1)
+    vals = vals * (gate.reshape(B, S * k, 1) * keep[..., None]).astype(vals.dtype)
+    out = vals.reshape(B, S, k, d).sum(axis=2)
+
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss,
+           "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return out, aux

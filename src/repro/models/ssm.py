@@ -1,0 +1,207 @@
+"""Mamba2 (state-space duality) block: chunked-scan training + recurrent decode.
+
+Follows Dao & Gu (2024) SSD with scalar-per-head decay A:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;   y_t = C_t^T h_t + D x_t
+
+Training/prefill uses the chunked dual form: intra-chunk attention-like
+quadratic term + inter-chunk state recurrence (a short lax.scan over chunks).
+Decode is the O(1) recurrence with a rolling depthwise-conv cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init, rmsnorm
+
+
+class SSMSpec(NamedTuple):
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self):
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self):
+        return self.d_inner + 2 * self.d_state  # x, B, C share the conv
+
+
+def ssm_init(key, spec: SSMSpec, dtype):
+    ks = jax.random.split(key, 8)
+    di, N, H = spec.d_inner, spec.d_state, spec.n_heads
+    proj_out = 2 * di + 2 * N + H    # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], spec.d_model, (proj_out,), dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.d_conv, spec.conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((spec.conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(dtype),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], di, (spec.d_model,), dtype),
+    }
+
+
+def _split_proj(zxbcdt, spec: SSMSpec):
+    di, N, H = spec.d_inner, spec.d_state, spec.n_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + spec.conv_dim]
+    dt = zxbcdt[..., di + spec.conv_dim:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, kernel K, via K shifted adds.  xBC: (B, S, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = sum(pad[:, k:k + S, :] * w[k] for k in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssm_apply(x, params, spec: SSMSpec, compute_dtype):
+    """Training/prefill forward.  x: (B, S, d_model) -> (B, S, d_model).
+
+    Returns (y, final_state) so prefill can seed the decode cache.
+    """
+    B, S, _ = x.shape
+    di, N, H, P = spec.d_inner, spec.d_state, spec.n_heads, spec.head_dim
+    Q = min(spec.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    w = lambda n: params[n].astype(compute_dtype)
+
+    zxbcdt = x @ w("in_proj")
+    z, xBC, dt_raw = _split_proj(zxbcdt, spec)
+    xBC = _causal_conv(xBC, w("conv_w"), w("conv_b"))
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di:di + N]                                  # (B, S, N), G=1
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))               # (H,)
+    dA = dt * A                                                      # log-decay
+
+    # chunk views
+    xs_c = xs.reshape(B, nc, Q, H, P)
+    B_c = Bm.reshape(B, nc, Q, N)
+    C_c = Cm.reshape(B, nc, Q, N)
+    dt_c = dt.reshape(B, nc, Q, H)
+    dA_c = dA.reshape(B, nc, Q, H)
+    la = jnp.cumsum(dA_c, axis=2)                                    # (B,nc,Q,H)
+
+    # ---- intra-chunk (dual/attention-like) term, vectorized over chunks ----
+    CB = jnp.einsum("bcin,bcjn->bcij", C_c, B_c,
+                    preferred_element_type=jnp.float32)              # (B,nc,Q,Q)
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]                # (B,nc,i,j,H)
+    iq = jnp.arange(Q)
+    causal = iq[:, None] >= iq[None, :]
+    att = CB[..., None] * jnp.exp(seg) * dt_c[:, :, None, :, :]      # (B,nc,i,j,H)
+    att = jnp.where(causal[None, None, :, :, None], att, 0.0)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", att.astype(compute_dtype),
+                        xs_c, preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk state recurrence ----
+    decay_to_end = jnp.exp(la[:, :, -1:, :] - la)                    # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                             (decay_to_end * dt_c).astype(compute_dtype),
+                             B_c, xs_c, preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(la[:, :, -1, :])                           # (B,nc,H)
+
+    def state_step(s, inputs):
+        cs, cd = inputs                                              # (B,H,P,N),(B,H)
+        s_new = s * cd[..., None, None] + cs
+        return s_new, s                                              # emit state *before* chunk
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    final_state, prev_states = lax.scan(
+        state_step, init,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)               # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         C_c, prev_states.astype(compute_dtype),
+                         jnp.exp(la).astype(compute_dtype),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_inter).reshape(B, S, H, P)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(compute_dtype)
+
+    # gated RMSNorm + out projection
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, {"scale": params["norm_scale"]}, 1e-5)
+    out = y @ w("out_proj")
+
+    conv_tail = xBC_raw_tail(x, params, spec, compute_dtype)
+    return out, {"ssm": final_state.astype(jnp.float32), "conv": conv_tail}
+
+
+def xBC_raw_tail(x, params, spec: SSMSpec, compute_dtype):
+    """Last (K-1) pre-conv xBC rows — the decode conv cache after prefill."""
+    K = spec.d_conv
+    w = lambda n: params[n].astype(compute_dtype)
+    tail = x[:, -(K - 1):, :] @ w("in_proj")
+    _, xBC, _ = _split_proj(tail, spec)
+    return xBC  # (B, K-1, conv_dim)
+
+
+def ssm_init_cache(batch, spec: SSMSpec, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.d_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, spec.d_conv - 1, spec.conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(x, cache, params, spec: SSMSpec, compute_dtype):
+    """One-token recurrence.  x: (B, d_model); cache from ssm_init_cache.
+
+    Returns (y (B, d_model), new_cache).
+    """
+    B, _ = x.shape
+    di, N, H, P = spec.d_inner, spec.d_state, spec.n_heads, spec.head_dim
+    K = spec.d_conv
+    w = lambda n: params[n].astype(compute_dtype)
+
+    zxbcdt = x @ w("in_proj")
+    z, xBC_new, dt_raw = _split_proj(zxbcdt, spec)
+    # rolling conv window: cache holds previous K-1 raw xBC rows
+    window = jnp.concatenate([cache["conv"], xBC_new[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w("conv_w")) + w("conv_b")
+    xBC = jax.nn.silu(conv_out)
+    xv = xBC[:, :di].reshape(B, H, P)
+    Bm = xBC[:, di:di + N]
+    Cm = xBC[:, di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))    # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                             # (B,H)
+
+    state = cache["ssm"]                                             # (B,H,P,N) f32
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xv.astype(jnp.float32), Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xv.astype(jnp.float32)
+    y = y.reshape(B, di).astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, {"scale": params["norm_scale"]}, 1e-5)
+    out = y @ w("out_proj")
+    new_cache = {"ssm": state, "conv": window[:, 1:, :]}
+    return out, new_cache

@@ -1,0 +1,448 @@
+"""Decoder-only transformer assembly: init / train-loss / prefill / decode.
+
+Layers are *stacked* (leading n_groups axis) and applied with lax.scan so the
+HLO is O(1) in depth; the per-layer body is wrapped in jax.checkpoint per the
+config's remat policy.  Heterogeneous layer patterns (gemma-2 local/global
+alternation) are expressed as a static ``layer_group`` tuple: the scan runs
+over groups, the group body unrolls its members with *static* kinds — so SWA
+layers take the O(S·window) slab path, not a masked O(S²) pass.
+
+Sharding is injected via a ``constrain(x, kind)`` callback (see
+repro.distributed.sharding) so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .attention import (attention, blockwise_attention, decode_attention,
+                        packed_causal_attention, swa_attention)
+from .layers import (act_fn, apply_rope, dense_init, embed_init, embed_lookup,
+                     layernorm, layernorm_init, mlp, mlp_init, pad_vocab,
+                     rmsnorm, rmsnorm_init)
+from .moe import moe_apply, moe_init
+from .ssm import (ssm_apply, ssm_decode_step, ssm_init, ssm_init_cache)
+from typing import TYPE_CHECKING
+if TYPE_CHECKING:  # avoid circular import; hints only
+    from ..configs.base import ModelConfig
+
+Constrain = Callable[[jax.Array, str], jax.Array]
+_noop: Constrain = lambda x, kind: x
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def _norm_init(cfg: ModelConfig, dtype):
+    return (rmsnorm_init if cfg.norm == "rmsnorm" else layernorm_init)(
+        cfg.d_model, dtype)
+
+
+def _norm(x, p, cfg: ModelConfig):
+    fn = rmsnorm if cfg.norm == "rmsnorm" else layernorm
+    return fn(x, p, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# attention sub-block
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, dtype, d_model=None):
+    d = d_model or cfg.d_model
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (H, hd), dtype),
+        "wk": dense_init(ks[1], d, (KH, hd), dtype),
+        "wv": dense_init(ks[2], d, (KH, hd), dtype),
+        "wo": (jax.random.normal(ks[3], (H, hd, d))
+               / math.sqrt(H * hd)).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KH, hd), dtype)
+        p["bv"] = jnp.zeros((KH, hd), dtype)
+    return p
+
+
+def _qkv(x, p, cfg: ModelConfig, cd, constrain, rope_positions=None):
+    w = lambda n: p[n].astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", x, w("wq"))
+    k = jnp.einsum("bsd,dhk->bshk", x, w("wk"))
+    v = jnp.einsum("bsd,dhk->bshk", x, w("wv"))
+    if cfg.qkv_bias:
+        q, k, v = q + w("bq"), k + w("bk"), v + w("bv")
+    if rope_positions is not None:
+        q = apply_rope(q, rope_positions, cfg.rope_theta)
+        k = apply_rope(k, rope_positions, cfg.rope_theta)
+    return constrain(q, "heads"), constrain(k, "kv_heads"), constrain(v, "kv_heads")
+
+
+def attn_apply(x, p, cfg: ModelConfig, *, kind: str, constrain: Constrain,
+               positions=None, causal=True):
+    """Self-attention for train/prefill.  kind: full | local."""
+    cd = x.dtype
+    B, S, _ = x.shape
+    if positions is None and cfg.rope_theta:
+        positions = jnp.arange(S)[None, :]
+    x = constrain(x, "attn_in")     # §Perf A2: joint batch split before QKV
+    q, k, v = _qkv(x, p, cfg, cd, constrain, positions)
+    window = cfg.window if kind == "local" else None
+    if cfg.attn_impl == "flash":
+        from .flash import flash_attention
+        out = flash_attention(q, k, v, causal, window, cfg.attn_softcap,
+                              cfg.q_block, cfg.k_block, 0)
+    elif not causal:
+        out = blockwise_attention(q, k, v, causal=False, softcap=cfg.attn_softcap,
+                                  q_block=cfg.q_block, k_block=cfg.k_block)
+    elif window is not None and S > 2 * window:
+        out = swa_attention(q, k, v, window=window, softcap=cfg.attn_softcap,
+                            q_block=cfg.q_block)
+    elif cfg.attn_impl == "packed" and window is None:
+        out = packed_causal_attention(q, k, v, softcap=cfg.attn_softcap,
+                                      q_block=cfg.q_block, k_block=cfg.k_block)
+    else:
+        out = blockwise_attention(q, k, v, causal=True, window=window,
+                                  softcap=cfg.attn_softcap,
+                                  q_block=cfg.q_block, k_block=cfg.k_block)
+    out = constrain(out, "heads")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+def attn_prefill_kv(x, p, cfg: ModelConfig, cd, constrain, positions):
+    """K/V for cache seeding (rope pre-applied)."""
+    _, k, v = _qkv(x, p, cfg, cd, constrain, positions)
+    return k, v
+
+
+def attn_decode(x, p, cfg: ModelConfig, cache_k, cache_v, pos, *, kind: str,
+                constrain: Constrain):
+    """One-token self-attention.  x: (B,1,d); caches (B,Sc,KH,hd); pos scalar.
+
+    SWA layers use a ring buffer of width == cache length; full layers insert
+    at ``pos``.  Returns (out (B,1,d), new_k, new_v).
+    """
+    cd = x.dtype
+    Sc = cache_k.shape[1]
+    positions = jnp.full((1, 1), pos)
+    q, k, v = _qkv(x, p, cfg, cd, constrain, positions)
+    window = cfg.window if kind == "local" else None
+    if window is not None and Sc == window:
+        slot = pos % window
+        eff_pos, eff_window = jnp.minimum(pos + 1, window), None
+    else:
+        slot = pos
+        eff_pos, eff_window = pos + 1, window
+    new_k = lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    new_v = lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    out = decode_attention(q, new_k, new_v, eff_pos, window=eff_window,
+                           softcap=cfg.attn_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return out, new_k, new_v
+
+
+# ---------------------------------------------------------------------------
+# decoder layer (dense or MoE ffn)
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": _norm_init(cfg, dtype),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "ln2": _norm_init(cfg, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.moe, dtype,
+                            gated=cfg.gated_mlp)
+        if cfg.moe.dense_residual:
+            p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                                gated=cfg.gated_mlp)
+    else:
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                            gated=cfg.gated_mlp)
+    if cfg.post_norms:
+        p["ln1_post"] = _norm_init(cfg, dtype)
+        p["ln2_post"] = _norm_init(cfg, dtype)
+    return p
+
+
+def _ffn(x, p, cfg: ModelConfig, constrain: Constrain):
+    """Dense MLP and/or MoE; returns (y, aux_losses)."""
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32)}
+    y = jnp.zeros_like(x)
+    if cfg.moe is not None:
+        ym, aux_m = moe_apply(
+            x, p["moe"], cfg.moe, act=cfg.act, compute_dtype=x.dtype,
+            constrain_hidden=lambda h: constrain(h, "moe_hidden"),
+            constrain_in=lambda h: constrain(h, "moe_in"),
+            constrain_out=lambda h: constrain(h, "moe_out"))
+        y = y + ym
+        aux = {"lb_loss": aux_m["lb_loss"], "z_loss": aux_m["z_loss"]}
+        if cfg.moe.dense_residual:
+            y = y + mlp(x, p["mlp"], cfg.act, x.dtype,
+                        constrain=lambda h: constrain(h, "act_ff"))
+    else:
+        y = mlp(x, p["mlp"], cfg.act, x.dtype,
+                constrain=lambda h: constrain(h, "act_ff"))
+    return y, aux
+
+
+def layer_apply(x, p, cfg: ModelConfig, *, kind: str, constrain: Constrain,
+                positions=None):
+    h = attn_apply(_norm(x, p["ln1"], cfg), p["attn"], cfg, kind=kind,
+                   constrain=constrain, positions=positions)
+    if cfg.post_norms:
+        h = _norm(h, p["ln1_post"], cfg)
+    x = constrain(x + h, "act")
+    h, aux = _ffn(_norm(x, p["ln2"], cfg), p, cfg, constrain)
+    if cfg.post_norms:
+        h = _norm(h, p["ln2_post"], cfg)
+    return constrain(x + h, "act"), aux
+
+
+def layer_decode(x, p, cfg: ModelConfig, ck, cv, pos, *, kind: str,
+                 constrain: Constrain):
+    h, ck, cv = attn_decode(_norm(x, p["ln1"], cfg), p["attn"], cfg, ck, cv,
+                            pos, kind=kind, constrain=constrain)
+    if cfg.post_norms:
+        h = _norm(h, p["ln1_post"], cfg)
+    x = x + h
+    h, _ = _ffn(_norm(x, p["ln2"], cfg), p, cfg, constrain)
+    if cfg.post_norms:
+        h = _norm(h, p["ln2_post"], cfg)
+    return x + h, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (never materializes (B, S, V))
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce(h, table, labels, cfg: ModelConfig, constrain: Constrain):
+    """h: (B,S,d); table: (Vp, d) output embedding; labels (B,S) (-1 = pad).
+
+    Returns (sum_nll, n_valid).  Scanned in cfg.ce_chunk slices with remat so
+    peak logits memory is (B, chunk, V).
+    """
+    B, S, d = h.shape
+    V = cfg.vocab_size
+    c = min(cfg.ce_chunk, S)
+    assert S % c == 0
+    t = table.astype(h.dtype)
+
+    @jax.checkpoint
+    def chunk_nll(h_c, y_c):
+        logits = jnp.einsum("bsd,vd->bsv", h_c, t,
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, "logits")[..., :V]
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1)[..., 0]
+        valid = (y_c >= 0)
+        nll = jnp.where(valid, lse - picked, 0.0)
+        return jnp.sum(nll), jnp.sum(valid)
+
+    def body(carry, xs):
+        h_c, y_c = xs
+        nll, n = chunk_nll(h_c, y_c)
+        return (carry[0] + nll, carry[1] + n), None
+
+    hs = h.reshape(B, S // c, c, d).transpose(1, 0, 2, 3)
+    ys = labels.reshape(B, S // c, c).transpose(1, 0, 2)
+    (nll, n), _ = lax.scan(body, (jnp.zeros((), jnp.float32),
+                                  jnp.zeros((), jnp.int32)), (hs, ys))
+    return nll, n
+
+
+# ---------------------------------------------------------------------------
+# decoder-only model
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(policy)
+
+
+@dataclasses.dataclass
+class DecoderModel:
+    """Decoder-only LM (dense / SWA / MoE families)."""
+
+    cfg: ModelConfig
+    constrain: Constrain = _noop
+
+    # ---- init ----
+    def init(self, key):
+        cfg = self.cfg
+        pd = _dt(cfg.param_dtype)
+        k_emb, k_layers, k_head = jax.random.split(key, 3)
+        layer_keys = jax.random.split(k_layers, cfg.n_groups * cfg.group_size)
+        layer_keys = layer_keys.reshape(cfg.n_groups, cfg.group_size)
+        stacked = jax.vmap(jax.vmap(lambda k: layer_init(k, cfg, pd)))(layer_keys)
+        params = {
+            "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, pd),
+            "layers": stacked,
+            "final_norm": _norm_init(cfg, pd),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(k_head, cfg.vocab_size, cfg.d_model, pd)
+        return params
+
+    # ---- shared trunk ----
+    def _embed_in(self, params, batch, cd):
+        cfg = self.cfg
+        if cfg.input_mode == "embeddings" and "embeddings" in batch:
+            return batch["embeddings"].astype(cd)
+        return embed_lookup(params["embed"], batch["tokens"], cd,
+                            scale_by_sqrt_d=cfg.embed_scale)
+
+    def _trunk(self, params, x, positions):
+        cfg = self.cfg
+
+        def group_body(x, gparams):
+            aux_sum = jnp.zeros((2,), jnp.float32)
+            for j, kind in enumerate(cfg.layer_group):
+                pj = jax.tree.map(lambda a: a[j], gparams)
+                x, aux = layer_apply(x, pj, cfg, kind=kind,
+                                     constrain=self.constrain,
+                                     positions=positions)
+                aux_sum = aux_sum + jnp.stack([aux["lb_loss"], aux["z_loss"]])
+            return x, aux_sum
+
+        body = _remat(group_body, cfg.remat)
+
+        def scan_body(x, gparams):
+            return body(x, gparams)
+
+        x, auxes = lax.scan(scan_body, x, params["layers"])
+        x = _norm(x, params["final_norm"], cfg)
+        return x, jnp.sum(auxes, axis=0)
+
+    def _out_table(self, params):
+        return params["embed" if self.cfg.tie_embeddings else "lm_head"]["table"]
+
+    # ---- train ----
+    def loss(self, params, batch):
+        """batch: tokens/embeddings + labels (-1 ignored).  Returns (loss, metrics)."""
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        params = jax.tree.map(lambda a: a.astype(cd) if a.dtype == jnp.float32
+                              and a.ndim > 1 else a, params)
+        x = self._embed_in(params, batch, cd)
+        x = self.constrain(x, "act")
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        h, aux = self._trunk(params, x, positions)
+        nll, n = chunked_ce(h, self._out_table(params), batch["labels"], cfg,
+                            self.constrain)
+        loss = nll / jnp.maximum(n, 1)
+        lb, z = aux[0] / cfg.n_layers, aux[1] / cfg.n_layers
+        total = loss + 0.01 * lb + 0.001 * z
+        return total, {"nll": loss, "lb_loss": lb, "z_loss": z}
+
+    # ---- serve ----
+    def cache_spec(self, batch_size: int, max_len: int):
+        """Shapes of the KV cache pytree (per layer kind: SWA ring or full)."""
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        caches = {}
+        for j, kind in enumerate(cfg.layer_group):
+            span = min(cfg.window, max_len) if kind == "local" and cfg.window \
+                else max_len
+            caches[f"k{j}"] = jnp.zeros(
+                (cfg.n_groups, batch_size, span, cfg.n_kv_heads, cfg.head_dim), cd)
+            caches[f"v{j}"] = jnp.zeros_like(caches[f"k{j}"])
+        return caches
+
+    def prefill(self, params, batch):
+        """Full-sequence forward + cache seeding.  Returns (last_logits, cache)."""
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        params = jax.tree.map(lambda a: a.astype(cd) if a.dtype == jnp.float32
+                              and a.ndim > 1 else a, params)
+        x = self._embed_in(params, batch, cd)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        cache = self.cache_spec(B, S)
+
+        def group_body(x, inputs):
+            gparams, gcache = inputs
+            new_c = {}
+            for j, kind in enumerate(cfg.layer_group):
+                pj = jax.tree.map(lambda a: a[j], gparams)
+                xin = _norm(x, pj["ln1"], cfg)
+                k, v = attn_prefill_kv(xin, pj["attn"], cfg, cd,
+                                       self.constrain, positions)
+                span = gcache[f"k{j}"].shape[1]
+                new_c[f"k{j}"] = k[:, -span:]
+                new_c[f"v{j}"] = v[:, -span:]
+                x, _ = layer_apply(x, pj, cfg, kind=kind,
+                                   constrain=self.constrain, positions=positions)
+            return x, new_c
+
+        body = _remat(group_body, cfg.remat)
+        # scan over groups, emitting each group's cache slabs
+        def scan_body(x, inputs):
+            return body(x, inputs)
+
+        x, caches = lax.scan(scan_body, x, (params["layers"], cache))
+        x = _norm(x, params["final_norm"], cfg)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(cd),
+                            self._out_table(params).astype(cd),
+                            preferred_element_type=jnp.float32)
+        logits = logits[..., :cfg.vocab_size]
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits, caches
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1) int32; pos: scalar int32 position of this token.
+
+        Returns (logits (B, V), new_cache).
+        """
+        cfg = self.cfg
+        cd = _dt(cfg.compute_dtype)
+        params = jax.tree.map(lambda a: a.astype(cd) if a.dtype == jnp.float32
+                              and a.ndim > 1 else a, params)
+        x = embed_lookup(params["embed"], tokens, cd,
+                         scale_by_sqrt_d=cfg.embed_scale)
+        x = self.constrain(x, "act")
+
+        def group_body(x, inputs):
+            gparams, gcache = inputs
+            new_c = dict(gcache)
+            for j, kind in enumerate(cfg.layer_group):
+                pj = jax.tree.map(lambda a: a[j], gparams)
+                x, ck, cv = layer_decode(x, pj, cfg, gcache[f"k{j}"],
+                                         gcache[f"v{j}"], pos, kind=kind,
+                                         constrain=self.constrain)
+                new_c[f"k{j}"], new_c[f"v{j}"] = ck, cv
+            return x, new_c
+
+        x, new_cache = lax.scan(group_body, x, (params["layers"], cache))
+        x = _norm(x, params["final_norm"], cfg)
+        logits = jnp.einsum("bsd,vd->bsv", x, self._out_table(params).astype(cd),
+                            preferred_element_type=jnp.float32)[:, 0, :cfg.vocab_size]
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits, new_cache

@@ -1,0 +1,3 @@
+"""Optimizers and gradient utilities."""
+from .adamw import AdamWConfig, global_norm, init, lr_schedule, update  # noqa: F401
+from . import grad  # noqa: F401

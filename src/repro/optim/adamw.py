@@ -1,0 +1,90 @@
+"""AdamW with decoupled weight decay, global-norm clipping, mixed precision.
+
+Plain-pytree implementation (no optax).  Optimizer-state dtype is
+configurable: fp32 by default; bf16 for arctic-480b where fp32 m/v would
+blow the HBM budget (config's param_dtype doubles as the opt-state dtype).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac * peak."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.minimum(warm, 1.0) * cos
+
+
+def _decayable(path: str) -> bool:
+    """Weight decay applies to matrices, not to norms/biases/1-d params."""
+    for tag in ("scale", "bias", "A_log", "dt_bias", "'D'", "'b"):
+        if tag in path:
+            return False
+    return True
+
+
+def global_norm(tree):
+    sq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), tree, 0.0)
+    return jnp.sqrt(sq)
+
+
+def init(params):
+    z = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, opt_state, params, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    bc1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(kp, p, g, m, v):
+        path = jax.tree_util.keystr(kp)
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g * g
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if _decayable(path):
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p32 = p.astype(jnp.float32) - lr * step
+        return p32.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree_util.tree_map_with_path(
+        upd, params, grads, opt_state["m"], opt_state["v"])
+    # unzip the (p, m, v) tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,86 @@
+"""Gradient utilities: int8 error-feedback compression for cross-pod
+all-reduce, and explicit compressed DP reduction via shard_map.
+
+At 1000+ nodes the pod-level (DCN) gradient all-reduce is the scarcest
+bandwidth.  ``compressed_psum`` quantizes each leaf to int8 with a per-leaf
+scale before the pod-axis psum and keeps the quantization residual locally
+(error feedback), so the *long-run* gradient is unbiased while per-step DCN
+bytes drop 4× vs f32 (2× vs bf16).  Collective-byte impact is measured in
+§Perf via the dry-run HLO.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def quantize_int8(x, *, stochastic_key=None):
+    """Symmetric per-tensor int8 quantization.  Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    y = x / scale
+    if stochastic_key is not None:
+        y = y + jax.random.uniform(stochastic_key, y.shape, y.dtype, -0.5, 0.5)
+    q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_leaf(g, err):
+    """Error-feedback compression of one leaf: returns (q, scale, new_err)."""
+    g32 = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(g32)
+    new_err = g32 - dequantize(q, scale)
+    return q, scale, new_err
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads, err_state, axis_name: str):
+    """int8 + error-feedback psum over ``axis_name`` (inside shard_map).
+
+    Each participant quantizes (g + err) to int8, psums the int8 payload (as
+    int32 accumulator) and the scales, and dequantizes with the mean scale.
+    Residuals stay local.  Returns (reduced grads f32, new err_state).
+    """
+    n = lax.psum(1, axis_name)
+
+    def leaf(g, e):
+        q, scale, new_e = ef_compress_leaf(g, e)
+        tot = lax.psum(q.astype(jnp.int32), axis_name)
+        s = lax.psum(scale, axis_name) / n           # mean scale approx
+        return tot.astype(jnp.float32) * s / n, new_e
+
+    out = jax.tree_util.tree_map(leaf, grads, err_state)
+    red = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return red, new_err
+
+
+def make_compressed_dp_allreduce(mesh: Mesh, pod_axis: str = "pod"):
+    """shard_map wrapper reducing grads over the pod (DCN) axis with int8 EF.
+
+    Grads enter sharded however they are; only the pod axis is reduced.
+    """
+
+    def reduce_fn(grads, err):
+        return compressed_psum(grads, err, pod_axis)
+
+    def apply(grads, err_state):
+        specs = jax.tree.map(lambda _: P(), grads)   # per-shard local view
+        f = jax.shard_map(reduce_fn, mesh=mesh,
+                          in_specs=(specs, specs), out_specs=(specs, specs))
+        return f(grads, err_state)
+
+    return apply

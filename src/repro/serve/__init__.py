@@ -1,0 +1,2 @@
+"""Serving: continuous batching engine with Δ-window lane synchronization."""
+from .engine import Request, Result, ServeEngine  # noqa: F401

@@ -1,0 +1,4 @@
+"""Training substrate: step factory, checkpointing, fault tolerance."""
+from .train_step import (init_train_state, make_decode_step,  # noqa: F401
+                         make_prefill_step, make_train_step, state_pspecs)
+from . import checkpoint, fault  # noqa: F401

@@ -1,0 +1,110 @@
+"""Sharded checkpointing with elastic resharding on restore.
+
+Format: one ``.npz`` file holding all leaves (flattened key paths) plus a
+JSON manifest (step, config name, tree structure, dtypes).  Restore places
+leaves onto ANY mesh via NamedSharding — the mesh shape may differ from the
+one that saved (elastic restart after losing/gaining pods), because leaves
+are stored unsharded and re-partitioned on load.
+
+Async mode: a background thread serializes and writes while training
+continues (the caller passes a host copy; jax arrays are materialized with
+np.asarray before the thread starts so device buffers are not held).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return {jax.tree_util.keystr(kp): v for kp, v in leaves}
+
+
+def _key_for(s: str) -> str:
+    return re.sub(r"[^\w\.\-]", "_", s)
+
+
+def save(state, path, *, step: int | None = None, extra: dict | None = None):
+    """Synchronous checkpoint write.  ``state`` is any pytree of arrays."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(state)
+    arrays = {}
+    manifest = {"keys": {}, "step": step, "extra": extra or {}}
+    for i, (k, v) in enumerate(sorted(flat.items())):
+        nk = f"a{i}"
+        arrays[nk] = np.asarray(v)
+        manifest["keys"][k] = nk
+    tmp = pathlib.Path(str(path) + ".tmp.npz")   # ends in .npz: savez keeps it
+    np.savez(tmp, **arrays)
+    tmp.rename(str(path) + ".npz")
+    pathlib.Path(str(path) + ".json").write_text(json.dumps(manifest))
+    return path
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget checkpoint writes on a background thread."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+
+    def save(self, state, path, **kw):
+        host_state = jax.tree.map(np.asarray, state)   # snapshot now
+        self.wait()
+        self._thread = threading.Thread(
+            target=save, args=(host_state, path), kwargs=kw, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def restore(path, like, shardings=None):
+    """Load a checkpoint into the structure of ``like`` (a pytree template).
+
+    ``shardings``: optional matching pytree of NamedSharding — enables
+    elastic restore onto a different mesh than the checkpoint was saved from.
+    """
+    path = pathlib.Path(path)
+    manifest = json.loads(pathlib.Path(str(path) + ".json").read_text())
+    data = np.load(str(path) + ".npz")
+    flat_like = _flatten(like)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for k, template in flat_like.items():
+        nk = manifest["keys"].get(k)
+        if nk is None:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        arr = data[nk]
+        if tuple(arr.shape) != tuple(template.shape):
+            raise ValueError(f"shape mismatch for {k}: "
+                             f"{arr.shape} vs {template.shape}")
+        arr = arr.astype(template.dtype)
+        sh = flat_sh.get(k)
+        out[k] = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+    # rebuild the tree in `like`'s structure
+    leaves_paths = jax.tree_util.tree_leaves_with_path(like)
+    treedef = jax.tree_util.tree_structure(like)
+    ordered = [out[jax.tree_util.keystr(kp)] for kp, _ in leaves_paths]
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def latest_step(ckpt_dir) -> int | None:
+    d = pathlib.Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.glob("step_*.json"):
+        try:
+            steps.append(int(p.stem.split("_")[1]))
+        except (IndexError, ValueError):
+            continue
+    return max(steps) if steps else None

@@ -1,0 +1,101 @@
+"""Train/serve step factories with sharding annotations and microbatching."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.sharding import (Parallelism, batch_pspecs, cache_pspecs,
+                                    make_constrain, param_pspecs, to_shardings)
+from ..models import build_model
+from ..optim import adamw
+from ..optim.adamw import AdamWConfig
+
+
+def make_train_step(cfg: ModelConfig, par: Parallelism | None = None,
+                    opt_cfg: AdamWConfig = AdamWConfig()):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt": {m, v, count}, "step"}.  Gradient accumulation
+    over cfg.microbatches splits the batch's leading dim.
+    """
+    constrain = make_constrain(par, cfg.n_heads) if par is not None \
+        else (lambda x, k: x)
+    model = build_model(cfg, constrain)
+    n_micro = cfg.microbatches
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_micro, acc, g)
+                return (acc,), (l, m)
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda a: a.reshape((n_micro, a.shape[0] // n_micro)
+                                    + a.shape[1:]), batch)
+            (grads,), (losses, metricses) = jax.lax.scan(micro, (acc0,), mbs)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricses)
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state["opt"], params, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return model, train_step
+
+
+def init_train_state(model, key):
+    params = model.init(key)
+    return {"params": params, "opt": adamw.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_pspecs(state, par: Parallelism):
+    pp = param_pspecs(state["params"], par)
+    return {
+        "params": pp,
+        "opt": {"m": pp, "v": pp, "count": P()},
+        "step": P(),
+    }
+
+
+def make_prefill_step(cfg: ModelConfig, par: Parallelism | None = None):
+    constrain = make_constrain(par, cfg.n_heads) if par is not None \
+        else (lambda x, k: x)
+    model = build_model(cfg, constrain)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return model, prefill
+
+
+def make_decode_step(cfg: ModelConfig, par: Parallelism | None = None):
+    constrain = make_constrain(par, cfg.n_heads) if par is not None \
+        else (lambda x, k: x)
+    model = build_model(cfg, constrain)
+
+    def decode(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return model, decode

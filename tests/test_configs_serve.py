@@ -1,0 +1,83 @@
+"""Config registry integrity + serve engine end-to-end on a reduced model."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ARCH_IDS, LONG_CONTEXT_SKIPS, SHAPES,
+                           cell_is_runnable, get_config, get_shape)
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+
+EXPECTED_PARAMS_B = {
+    "internvl2-76b": (65, 76),    # LLM backbone only; +6B stubbed ViT
+    "gemma2-2b": (2.0, 3.3),
+    "qwen2.5-3b": (2.5, 3.6),
+    "llama3.2-1b": (1.0, 1.5),
+    "h2o-danube-3-4b": (3.3, 4.5),
+    "whisper-base": (0.05, 0.12),
+    "zamba2-2.7b": (2.0, 3.0),
+    "mixtral-8x7b": (44, 49),
+    "arctic-480b": (450, 500),
+    "mamba2-130m": (0.1, 0.18),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_match_public_configs(arch):
+    cfg = get_config(arch)
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = cfg.n_params() / 1e9
+    assert lo <= n <= hi, (arch, n)
+
+
+def test_active_params_moe():
+    mix = get_config("mixtral-8x7b")
+    assert mix.n_active_params() < 0.35 * mix.n_params()
+    arc = get_config("arctic-480b")
+    assert arc.n_active_params() < 0.05 * arc.n_params()
+
+
+def test_registry_and_shapes():
+    assert len(ARCH_IDS) == 10 and len(SHAPES) == 4
+    assert get_shape("train_4k").kind == "train"
+    assert get_shape("long_500k").seq_len == 524_288
+    with pytest.raises(KeyError):
+        get_config("nonexistent")
+
+
+def test_cell_skip_rule():
+    assert not cell_is_runnable("llama3.2-1b", "long_500k")
+    assert cell_is_runnable("mamba2-130m", "long_500k")
+    assert cell_is_runnable("llama3.2-1b", "train_4k")
+    # 40 cells - 5 long-context skips
+    runnable = sum(cell_is_runnable(a, s) for a in ARCH_IDS for s in SHAPES)
+    assert runnable == 35
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_configs_are_tiny(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_params() < 5e7
+    assert cfg.family == get_config(arch).family
+
+
+def test_serve_engine_end_to_end():
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, batch_lanes=2, max_len=64, delta=8.0)
+    rng = np.random.default_rng(0)
+    for uid in range(3):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size, 8,
+                                               dtype=np.int32),
+                           max_new_tokens=6))
+    results = eng.run()
+    assert set(results) == {0, 1, 2}
+    for r in results.values():
+        assert 1 <= len(r.tokens) <= 6
+        assert all(0 <= t < cfg.vocab_size for t in r.tokens)
+    assert 0.0 < eng.lane_utilization <= 1.0

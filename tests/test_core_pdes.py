@@ -1,0 +1,149 @@
+"""Core PDES semantics: update rules, measurement identities, scaling fits."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PDESConfig, ensemble, horizon, measurement, scaling,
+                        theory)
+
+KEY = jax.random.key(42)
+
+
+class TestUpdateRules:
+    def test_initial_utilization_is_one(self):
+        """Fully synchronized start: every PE updates at t=0 (Sec. IV.B)."""
+        cfg = PDESConfig(L=32, n_v=1)
+        st, stats = horizon.run(horizon.init_state(cfg, 8), KEY, cfg, 1)
+        np.testing.assert_allclose(np.asarray(stats.utilization[0]), 1.0)
+
+    def test_delta_zero_serializes(self):
+        """Δ=0: only the slowest PE may update -> u -> 1/L (Sec. IV.A)."""
+        cfg = PDESConfig(L=16, n_v=1, delta=0.0)
+        st = horizon.burn_in(horizon.init_state(cfg, 16), KEY, cfg, 50)
+        _, stats = horizon.run_mean(st, jax.random.key(1), cfg, 400)
+        u = float(np.asarray(stats.utilization).mean())
+        assert abs(u - 1.0 / 16) < 0.02, u
+
+    def test_rd_infinite_window_is_full_utilization(self):
+        """RD + Δ=inf: no constraints at all -> u = 100%."""
+        cfg = PDESConfig(L=32, n_v=1, rd_mode=True)
+        _, stats = horizon.run(horizon.init_state(cfg, 4), KEY, cfg, 20)
+        np.testing.assert_allclose(np.asarray(stats.utilization), 1.0)
+
+    def test_tau_monotone_and_causality(self):
+        """Virtual times never decrease; updates never violate Eq. (1)."""
+        cfg = PDESConfig(L=64, n_v=3, delta=5.0)
+        state = horizon.init_state(cfg, 4)
+        key = KEY
+        tau_abs = np.zeros((4, 64))
+        for t in range(30):
+            bits = horizon.event_bits(key, state.step, state.tau.shape)
+            is_l, is_r, eta = horizon.decode_events(bits, cfg)
+            tau, upd, gvt = horizon.step_core(state.tau, is_l, is_r, eta, cfg)
+            tau_np, upd_np = np.asarray(state.tau), np.asarray(upd)
+            # causality: an updated left-border PE had tau <= left neighbor
+            viol_l = upd_np & np.asarray(is_l) & (tau_np > np.roll(tau_np, 1, -1))
+            viol_r = upd_np & np.asarray(is_r) & (tau_np > np.roll(tau_np, -1, -1))
+            assert not viol_l.any() and not viol_r.any()
+            assert (np.asarray(tau) >= tau_np - 1e-6).all()
+            state, _ = horizon._one_step(state, key, cfg)
+
+    def test_window_bound_spread(self):
+        """Δ-window bounds the horizon spread by Δ + O(one increment)."""
+        cfg = PDESConfig(L=128, n_v=1, delta=3.0)
+        st = horizon.burn_in(horizon.init_state(cfg, 8), KEY, cfg, 500)
+        tau = np.asarray(st.tau)
+        spread = tau.max(axis=1) - tau.min(axis=1)
+        # increments are Exp(1); allow a generous tail
+        assert (spread <= 3.0 + 12.0).all(), spread.max()
+
+    def test_border_both_stricter(self):
+        """Checking both neighbors can only lower utilization."""
+        u = {}
+        for both in (False, True):
+            cfg = PDESConfig(L=64, n_v=4, border_both=both)
+            st = horizon.burn_in(horizon.init_state(cfg, 16), KEY, cfg, 300)
+            _, stats = horizon.run_mean(st, jax.random.key(2), cfg, 300)
+            u[both] = float(np.asarray(stats.utilization).mean())
+        assert u[True] <= u[False] + 0.01
+
+
+class TestMeasurement:
+    def test_simplex_identities(self):
+        """Eqs. (17)-(18): group decomposition recombines exactly."""
+        tau = jax.random.exponential(KEY, (8, 100)) * 5
+        g = measurement.group_decomposition(tau)
+        np.testing.assert_allclose(
+            np.asarray(measurement.recombine_w2(g)),
+            np.asarray(measurement.width(tau)) ** 2, rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(measurement.recombine_wa(g)),
+            np.asarray(measurement.width_abs(tau)), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(g.f_slow + g.f_fast), 1.0)
+
+    def test_extremes_and_spread(self):
+        tau = jnp.array([[0.0, 1.0, 5.0, 2.0]])
+        above, below = measurement.extreme_fluctuations(tau)
+        assert float(above[0]) == 3.0 and float(below[0]) == 2.0
+        assert float(measurement.spread(tau)[0]) == 5.0
+
+    def test_progress_rate(self):
+        g = jnp.arange(100, dtype=jnp.float32)[:, None] * 0.25
+        r = measurement.progress_rate(g)
+        np.testing.assert_allclose(np.asarray(r), 0.25, rtol=1e-5)
+
+
+class TestScaling:
+    def test_krug_meakin_recovery(self):
+        Ls = np.array([16, 32, 64, 128, 256, 512])
+        u = theory.krug_meakin_u(Ls, u_inf=0.2464, const=0.31)
+        ex = scaling.krug_meakin_extrapolate(Ls, u)
+        assert abs(ex.u_inf - 0.2464) < 1e-6
+
+    def test_rational_extrapolation(self):
+        Ls = np.array([8, 16, 32, 64, 128, 256, 512, 1024])
+        u = 0.3 + 0.5 / Ls + 2.0 / Ls**2
+        ex = scaling.rational_extrapolate(Ls, u)
+        assert abs(ex.u_inf - 0.3) < 5e-3, ex
+
+    def test_power_law_fit(self):
+        t = np.arange(1, 1000)
+        w2 = 3.0 * t ** (2 / 3)
+        beta, resid = scaling.growth_exponent(t, w2)
+        assert abs(beta - 1 / 3) < 0.01 and resid < 1e-6
+
+    def test_roughness_exponent(self):
+        Ls = np.array([16, 32, 64, 128])
+        alpha, _ = scaling.roughness_exponent(Ls, 0.1 * Ls ** 1.0)
+        assert abs(alpha - 0.5) < 0.01
+
+
+class TestTheory:
+    def test_u_kpz_limits(self):
+        assert abs(theory.u_kpz(1) - 0.2475) < 1e-3
+        assert theory.u_kpz(1e9) > 0.99
+
+    def test_u_rd_limits(self):
+        assert theory.u_rd(0.0) == 0.0
+        assert theory.u_rd(1e9) > 0.99
+        # monotone increasing in Δ
+        d = np.array([0.5, 1, 2, 5, 10, 50, 100])
+        u = theory.u_rd(d)
+        assert (np.diff(u) > 0).all()
+
+    def test_p_exponent_limits(self):
+        assert theory.p_exponent(0.0) == 0.0
+        assert theory.p_exponent(1e12) > 0.999
+
+    def test_composite_delta_inf_equals_kpz(self):
+        n = np.array([1.0, 10.0, 100.0])
+        np.testing.assert_allclose(theory.u_composite(n, np.inf),
+                                   theory.u_kpz(n))
+
+    def test_mean_field_eq13(self):
+        # u = 1 / (1 + (δ - 2/NV) p_w); sanity at p_w = 0 -> u = 1
+        assert theory.u_kpz_mean_field(10, 3.0, 0.0) == 1.0
+        assert theory.u_kpz_mean_field(10, 3.0, 0.5) < 1.0

@@ -1,0 +1,92 @@
+"""Optimizer, schedule, gradient compression, prefetcher."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, Prefetcher, make_batch
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, lr_schedule
+from repro.optim.grad import (dequantize, ef_compress_leaf, init_error_state,
+                              quantize_int8)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = AdamWConfig(peak_lr=0.1, warmup_steps=5, total_steps=200,
+                          weight_decay=0.0, clip_norm=100.0)
+        target = jnp.array([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros(3)}
+        state = adamw.init(params)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            params, state, m = adamw.update(g, state, params, cfg)
+        np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                                   atol=0.05)
+
+    def test_clip_norm(self):
+        cfg = AdamWConfig(clip_norm=1.0)
+        params = {"w": jnp.zeros(4)}
+        state = adamw.init(params)
+        g = {"w": jnp.full(4, 100.0)}
+        _, _, m = adamw.update(g, state, params, cfg)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_no_decay_on_norm_scales(self):
+        cfg = AdamWConfig(peak_lr=1.0, warmup_steps=0, weight_decay=0.1)
+        params = {"mlp": {"wi": jnp.ones((2, 2))},
+                  "ln": {"scale": jnp.ones(2)}}
+        state = adamw.init(params)
+        zg = jax.tree.map(jnp.zeros_like, params)
+        new, _, _ = adamw.update(zg, state, params, cfg)
+        # decayed matrix shrinks toward zero; norm scale untouched
+        assert float(new["mlp"]["wi"].max()) < 1.0
+        assert float(new["mlp"]["wi"].min()) > 0.5
+        np.testing.assert_allclose(np.asarray(new["ln"]["scale"]), 1.0)
+
+    def test_schedule_shape(self):
+        cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in range(0, 101, 10)]
+        assert lrs[1] == pytest.approx(1.0, rel=1e-3)      # end of warmup
+        assert lrs[-1] == pytest.approx(0.1, rel=1e-2)     # cosine floor
+        assert max(lrs) <= 1.0 + 1e-6
+
+
+class TestCompression:
+    def test_quantize_roundtrip_bound(self):
+        x = jax.random.normal(jax.random.key(0), (1000,))
+        q, s = quantize_int8(x)
+        err = np.abs(np.asarray(dequantize(q, s) - x))
+        assert err.max() <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_unbiased_over_time(self):
+        """Constant gradient: EF-compressed sum converges to the true sum."""
+        g = jax.random.normal(jax.random.key(1), (256,)) * 0.01
+        err = jnp.zeros(256)
+        total = jnp.zeros(256)
+        for _ in range(50):
+            q, s, err = ef_compress_leaf(g, err)
+            total = total + dequantize(q, s)
+        np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g),
+                                   atol=5e-4)
+
+    def test_init_error_state(self):
+        grads = {"a": jnp.ones((2, 3), jnp.bfloat16)}
+        e = init_error_state(grads)
+        assert e["a"].dtype == jnp.float32 and e["a"].shape == (2, 3)
+
+
+class TestPipeline:
+    def test_prefetcher_yields_in_order(self):
+        dc = DataConfig(vocab_size=64, seq_len=8, global_batch=2)
+        pf = Prefetcher(dc, start_step=0, depth=2)
+        try:
+            b0 = next(pf)
+            b1 = next(pf)
+            np.testing.assert_array_equal(np.asarray(b0["tokens"]),
+                                          np.asarray(make_batch(dc, 0)["tokens"]))
+            np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                          np.asarray(make_batch(dc, 1)["tokens"]))
+        finally:
+            pf.close()

@@ -1,0 +1,108 @@
+"""Pallas kernel validation: shape/param sweeps vs the pure-jnp oracle."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import horizon
+from repro.core.horizon import PDESConfig
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(7)
+
+SWEEP = [
+    # (L, n_v, delta, rd_mode, B)
+    (8, 1, math.inf, False, 3),
+    (64, 1, math.inf, False, 12),
+    (32, 10, 5.0, False, 8),
+    (128, 3, 1.0, False, 4),
+    (256, 1, 0.0, False, 2),
+    (64, 100, 10.0, True, 8),
+    (512, 7, 100.0, False, 1),
+]
+
+
+def _state_and_bits(cfg, B, steps=7):
+    state = horizon.init_state(cfg, B)
+    state = horizon.burn_in(state, KEY, cfg, steps)
+    bits = horizon.event_bits(KEY, state.step, state.tau.shape)
+    return state, bits
+
+
+@pytest.mark.parametrize("L,n_v,delta,rd,B", SWEEP)
+def test_pdes_step_matches_ref(L, n_v, delta, rd, B):
+    cfg = PDESConfig(L=L, n_v=n_v, delta=delta, rd_mode=rd)
+    state, bits = _state_and_bits(cfg, B)
+    tau_h = ops.ring_halo(state.tau)
+    gvt = jnp.min(state.tau, axis=-1, keepdims=True)
+    t1, s1 = ops.pdes_step(tau_h, bits, gvt, n_v=n_v, delta=delta, rd_mode=rd)
+    t2, _, s2 = ref.pdes_step_ref(tau_h, bits, gvt, n_v=n_v, delta=delta,
+                                  rd_mode=rd)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    for k in s1:
+        np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("L,n_v,delta,rd,B", SWEEP)
+def test_pdes_step_matches_core(L, n_v, delta, rd, B):
+    """Kernel path == horizon.step_core (the system's own semantics)."""
+    cfg = PDESConfig(L=L, n_v=n_v, delta=delta, rd_mode=rd)
+    state, bits = _state_and_bits(cfg, B)
+    t1, _ = ops.step_ring(state.tau, bits, cfg)
+    is_l, is_r, eta = horizon.decode_events(bits, cfg)
+    t2, _, _ = horizon.step_core(state.tau, is_l, is_r, eta, cfg)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+@pytest.mark.parametrize("L,n_v,delta,rd,B", SWEEP[:5])
+@pytest.mark.parametrize("K", [1, 4, 6])
+def test_pdes_multistep_matches_ref(L, n_v, delta, rd, B, K):
+    cfg = PDESConfig(L=L, n_v=n_v, delta=delta, rd_mode=rd)
+    state, _ = _state_and_bits(cfg, B)
+    bits = jnp.stack([horizon.event_bits(KEY, state.step + i, state.tau.shape)
+                      for i in range(K)])
+    t1, s1 = ops.pdes_multistep(state.tau, bits, n_v=n_v, delta=delta,
+                                rd_mode=rd)
+    t2, s2 = ref.pdes_multistep_ref(state.tau, bits, n_v=n_v, delta=delta,
+                                    rd_mode=rd)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    for k in s1:
+        np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 8])
+def test_block_size_invariance(block_b):
+    """Tiling must not change results."""
+    cfg = PDESConfig(L=64, n_v=2, delta=4.0)
+    state, bits = _state_and_bits(cfg, 8)
+    ta, _ = ops.step_ring(state.tau, bits, cfg, block_b=8)
+    tb, _ = ops.step_ring(state.tau, bits, cfg, block_b=block_b)
+    np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+
+@pytest.mark.parametrize("n_steps,k_fuse", [(5, 8), (16, 8), (37, 8), (24, 6)])
+def test_simulate_equals_run(n_steps, k_fuse):
+    """Kernel-path driver reproduces horizon.run stats and state exactly."""
+    cfg = PDESConfig(L=64, n_v=4, delta=8.0)
+    st0 = horizon.init_state(cfg, 8)
+    key = jax.random.key(3)
+    st_a, stats_a = horizon.run(st0, key, cfg, n_steps)
+    st_b, out_b = ops.simulate(st0, key, cfg, n_steps, k_fuse=k_fuse)
+    np.testing.assert_allclose(np.asarray(stats_a.utilization),
+                               np.asarray(out_b["u"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(stats_a.w2),
+                               np.asarray(out_b["w2"]), rtol=1e-4, atol=1e-4)
+    abs_a = np.asarray(st_a.tau) + np.asarray(st_a.offset)[:, None]
+    abs_b = np.asarray(st_b.tau) + np.asarray(st_b.offset)[:, None]
+    np.testing.assert_allclose(abs_a, abs_b, rtol=1e-5, atol=1e-4)
+
+
+def test_vmem_budget_helper():
+    cfg = PDESConfig(L=16384, n_v=1)
+    bb = ops.pick_block_b(cfg)
+    assert bb >= 1
+    assert ops.vmem_bytes(cfg, bb) <= 8 << 20

@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PDESConfig, horizon
+from repro.core.events import counter_bits_block
+from repro.data.pipeline import DataConfig, make_batch
+
+SET = dict(max_examples=20, deadline=None)
+
+
+class TestEventStream:
+    @given(seed=st.integers(0, 2**31 - 1), step=st.integers(0, 10_000),
+           n_v=st.integers(1, 1000))
+    @settings(**SET)
+    def test_decode_events_ranges(self, seed, step, n_v):
+        cfg = PDESConfig(L=32, n_v=n_v)
+        bits = horizon.event_bits(jax.random.key(seed), jnp.int32(step),
+                                  (2, 32))
+        is_l, is_r, eta = horizon.decode_events(bits, cfg)
+        assert (np.asarray(eta) > 0).all()          # Exp(1) strictly positive
+        if n_v == 1:
+            assert np.asarray(is_l).all() and np.asarray(is_r).all()
+
+    @given(seed=st.integers(0, 2**31 - 1), step=st.integers(0, 100_000))
+    @settings(**SET)
+    def test_counter_bits_deterministic_and_slice_consistent(self, seed, step):
+        """Any sub-block equals the corresponding slice of the full block —
+        the property that makes halo regeneration correct (DESIGN.md B4)."""
+        full = counter_bits_block(seed, jnp.int32(step), jnp.int32(0),
+                                  jnp.int32(0), 8, 32)
+        sub = counter_bits_block(seed, jnp.int32(step), jnp.int32(2),
+                                 jnp.int32(5), 3, 7)
+        np.testing.assert_array_equal(np.asarray(full[2:5, 5:12]),
+                                      np.asarray(sub))
+
+    def test_counter_bits_statistics(self):
+        """Counter stream is statistically uniform enough for the physics."""
+        bits = counter_bits_block(7, jnp.int32(3), jnp.int32(0), jnp.int32(0),
+                                  256, 256)
+        u = np.asarray(bits[..., 1], dtype=np.float64) / 2**32
+        assert abs(u.mean() - 0.5) < 5e-3
+        assert abs(u.std() - math.sqrt(1 / 12)) < 5e-3
+        # exponential moments from word 1 via the production decode
+        cfg = PDESConfig(L=256, n_v=1)
+        _, _, eta = horizon.decode_events(jnp.asarray(bits), cfg)
+        e = np.asarray(eta, dtype=np.float64)
+        assert abs(e.mean() - 1.0) < 2e-2            # Exp(1): mean 1
+        assert abs(e.std() - 1.0) < 3e-2             # Exp(1): std 1
+
+
+class TestPDESInvariants:
+    @given(delta=st.sampled_from([0.5, 2.0, 10.0, math.inf]),
+           n_v=st.sampled_from([1, 3, 10]),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=8, deadline=None)
+    def test_window_and_monotonicity(self, delta, n_v, seed):
+        cfg = PDESConfig(L=32, n_v=n_v, delta=delta)
+        state = horizon.init_state(cfg, 2)
+        key = jax.random.key(seed)
+        prev_gvt = np.full(2, -1e30)
+        for _ in range(5):
+            tau_before = np.asarray(state.tau) + np.asarray(state.offset)[:, None]
+            state, stats = horizon.run(state, key, cfg, 8)
+            tau_after = np.asarray(state.tau) + np.asarray(state.offset)[:, None]
+            # monotone local clocks
+            assert (tau_after >= tau_before - 1e-3).all()
+            # GVT never decreases (per trial)
+            gvt = np.asarray(stats.gvt)               # (T, B)
+            assert (gvt.min(axis=0) >= prev_gvt - 1e-3).all()
+            prev_gvt = gvt.max(axis=0)
+            if math.isfinite(delta):
+                spread = tau_after.max(1) - tau_after.min(1)
+                assert (spread <= delta + 16.0).all()
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=5, deadline=None)
+    def test_utilization_bounds(self, seed):
+        cfg = PDESConfig(L=16, n_v=2, delta=4.0)
+        _, stats = horizon.run(horizon.init_state(cfg, 4),
+                               jax.random.key(seed), cfg, 32)
+        u = np.asarray(stats.utilization)
+        assert (u >= 1.0 / 16 - 1e-6).all()          # at least the min PE
+        assert (u <= 1.0).all()
+
+
+class TestDataPipeline:
+    @given(step=st.integers(0, 10_000))
+    @settings(**SET)
+    def test_batches_deterministic(self, step):
+        dc = DataConfig(vocab_size=128, seq_len=16, global_batch=2)
+        a = make_batch(dc, step)
+        b = make_batch(dc, step)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+    @given(step=st.integers(0, 1000), vocab=st.sampled_from([64, 1000, 50000]))
+    @settings(**SET)
+    def test_tokens_in_vocab(self, step, vocab):
+        dc = DataConfig(vocab_size=vocab, seq_len=32, global_batch=2)
+        b = make_batch(dc, step)
+        t = np.asarray(b["tokens"])
+        assert t.min() >= 0 and t.max() < vocab
+        # labels are next tokens
+        np.testing.assert_array_equal(np.asarray(b["labels"])[:, :-1],
+                                      t[:, 1:])
+
+    def test_zipf_skew(self):
+        dc = DataConfig(vocab_size=1000, seq_len=512, global_batch=8)
+        t = np.asarray(make_batch(dc, 0)["tokens"])
+        # low ranks must be much more frequent than the tail
+        head = (t < 10).mean()
+        assert head > 0.05, head
