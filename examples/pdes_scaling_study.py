@@ -4,6 +4,12 @@ Sweeps (L, N_V, Δ), extrapolates u_inf, and compares with the paper's
 composite fit Eq. (12).  Writes results/example_scaling.json.
 
 Usage: PYTHONPATH=src python examples/pdes_scaling_study.py [--fast]
+           [--backend reference|pallas|pallas_multistep]
+
+``--backend`` routes every simulation through the unified ``PDESEngine``
+(repro.core.engine) instead of the legacy jax.random-keyed scan — on real
+TPU hardware ``pallas_multistep`` is the fast path for exactly this kind of
+sweep.
 """
 import argparse
 import json
@@ -17,16 +23,20 @@ from repro.core import PDESConfig, ensemble, scaling, theory
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    choices=["reference", "pallas", "pallas_multistep"],
+                    help="route the sweep through this PDESEngine backend")
     args = ap.parse_args()
     Ls = [32, 64, 128, 256] if args.fast else [64, 128, 256, 512, 1024]
-    out = {}
+    out = {"backend": args.backend or "legacy-horizon"}
     for delta in (5.0, 20.0):
         for nv in (1, 10, "rd"):
             us = []
             for L in Ls:
                 cfg = PDESConfig(L=L, n_v=1 if nv == "rd" else nv,
                                  delta=delta, rd_mode=(nv == "rd"))
-                ss = ensemble.steady_state(cfg, n_trials=16, seed=L)
+                ss = ensemble.steady_state(cfg, n_trials=16, seed=L,
+                                           backend=args.backend)
                 us.append(ss.utilization)
             ex = scaling.rational_extrapolate(Ls, us)
             nv_eff = 1e8 if nv == "rd" else nv

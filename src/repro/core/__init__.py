@@ -24,3 +24,6 @@ from .measurement import (  # noqa: F401
     width_abs,
 )
 from . import ensemble, scaling, theory  # noqa: F401
+# engine imports the kernel wrappers, which import back into this package's
+# modules — keep it last so `horizon` is fully bound first.
+from .engine import EngineConfig, PDESEngine  # noqa: F401  (isort: skip)

@@ -31,10 +31,11 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import axis_size, pcast_varying, shard_map
 from .events import counter_bits_block
-from .horizon import PDESConfig
+from .horizon import PDESConfig, decode_words, conservative_update
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,33 +59,18 @@ class DistConfig:
 # ---------------------------------------------------------------------------
 
 
-def _decode(bits, n_v: int, dtype):
-    site = jnp.remainder(bits[..., 0], jnp.uint32(n_v)).astype(jnp.int32)
-    is_left = site == 0
-    is_right = site == (n_v - 1)
-    u = (bits[..., 1] >> jnp.uint32(8)).astype(dtype) * 2.0**-24
-    eta = -jnp.log(u + 2.0**-25)
-    return is_left, is_right, eta
-
-
 def _update_haloed(tau_h, bits, gvt, cfg: PDESConfig):
-    """One step on a haloed strip: tau_h (B, W + 2) -> (tau_next (B, W), update)."""
-    dtype = tau_h.dtype
+    """One step on a haloed strip: tau_h (B, W + 2) -> (tau_next (B, W), update).
+
+    Thin adapter over the shared update core in ``horizon`` (same code path
+    as the reference scan and the Pallas kernels, so parity is structural).
+    """
     tau = tau_h[:, 1:-1]
-    left, right = tau_h[:, :-2], tau_h[:, 2:]
-    is_left, is_right, eta = _decode(bits, cfg.n_v, dtype)
-    if cfg.rd_mode:
-        causal_ok = jnp.ones(tau.shape, dtype=bool)
-    else:
-        ok_l = jnp.where(is_left, tau <= left, True)
-        ok_r = jnp.where(is_right, tau <= right, True)
-        causal_ok = ok_l & ok_r
-    if math.isinf(cfg.delta):
-        window_ok = jnp.ones(tau.shape, dtype=bool)
-    else:
-        window_ok = tau <= cfg.delta + gvt
-    update = causal_ok & window_ok
-    return tau + jnp.where(update, eta, 0.0), update
+    is_left, is_right, eta = decode_words(
+        bits[..., 0], bits[..., 1], cfg.n_v, tau_h.dtype)
+    return conservative_update(
+        tau, tau_h[:, :-2], tau_h[:, 2:], is_left, is_right, eta, gvt,
+        delta=cfg.delta, rd_mode=cfg.rd_mode, border_both=cfg.border_both)
 
 
 def _local_stats(tau, update, dtype):
@@ -105,16 +91,20 @@ def _local_stats(tau, update, dtype):
 def _multi_axis_index(axes: Sequence[str]):
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * axis_size(a) + lax.axis_index(a)
     return idx
 
 
-def _shard_body(tau0, seed, *, cfg: PDESConfig, dist: DistConfig, n_steps: int,
-                L_total: int):
-    """Runs inside shard_map.  tau0: (B_l, L_l) local shard."""
+def _shard_body(tau0, seed, step_base, *, cfg: PDESConfig, dist: DistConfig,
+                n_steps: int, L_total: int):
+    """Runs inside shard_map.  tau0: (B_l, L_l) local shard.
+
+    ``step_base`` offsets the counter event stream so a run can continue an
+    earlier trajectory (the engine passes the carried ``SimState.step``).
+    """
     dtype = tau0.dtype
     ring = dist.ring_axis
-    ring_n = lax.axis_size(ring)
+    ring_n = axis_size(ring)
     ring_i = lax.axis_index(ring)
     B_l, L_l = tau0.shape
     b0 = _multi_axis_index(dist.ens_axes) * B_l
@@ -128,7 +118,7 @@ def _shard_body(tau0, seed, *, cfg: PDESConfig, dist: DistConfig, n_steps: int,
 
     def exact_chunk(carry, c):
         tau, off, comp = carry
-        step0 = c * K
+        step0 = step_base + c * K
 
         def one(tau, s):
             bits = counter_bits_block(seed, step0 + s, b0, l0, B_l, L_l)
@@ -147,7 +137,7 @@ def _shard_body(tau0, seed, *, cfg: PDESConfig, dist: DistConfig, n_steps: int,
 
     def commavoid_chunk(carry, c):
         tau, off, comp = carry
-        step0 = c * K
+        step0 = step_base + c * K
         # one K-wide halo exchange + one stale GVT per chunk
         lhalo = lax.ppermute(tau[:, -K:], ring, perm=fwd)
         rhalo = lax.ppermute(tau[:, :K], ring, perm=bwd)
@@ -193,8 +183,9 @@ def _shard_body(tau0, seed, *, cfg: PDESConfig, dist: DistConfig, n_steps: int,
 
     chunk = exact_chunk if dist.mode == "exact" else commavoid_chunk
     # carry starts replicated but becomes ensemble-varying after chunk 1;
-    # mark it varying up front so scan's carry types match.
-    z = lax.pcast(jnp.zeros((B_l,), dtype), dist.ens_axes, to="varying")
+    # mark it varying up front so scan's carry types match (no-op — paired
+    # with check_rep=False — on JAX versions without varying types).
+    z = pcast_varying(jnp.zeros((B_l,), dtype), dist.ens_axes)
     (tau, off, comp), (u, w2, gvt) = lax.scan(
         chunk, (tau0, z, z), jnp.arange(n_chunks, dtype=jnp.int32))
     stats = tuple(x.reshape(n_chunks * K, B_l) for x in (u, w2, gvt))
@@ -210,24 +201,29 @@ def run_sharded(
     seed: int = 0,
     dist: DistConfig = DistConfig(),
     dtype=jnp.float32,
+    tau0=None,
+    step_base=0,
 ):
     """Run the sharded PDES; returns (tau_abs (B, L), stats dict (n_steps, B)).
 
     ``n_trials`` must divide the ensemble mesh extent product and ``cfg.L``
-    the ring extent.
+    the ring extent.  ``tau0``/``step_base`` let the engine continue an
+    existing trajectory (rebased local times + carried step counter).
     """
-    ens_spec = P(dist.ens_axes, None)
     fn = functools.partial(
         _shard_body, cfg=cfg, dist=dist, n_steps=n_steps, L_total=cfg.L)
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         fn,
         mesh=mesh,
-        in_specs=(P(dist.ens_axes, dist.ring_axis), P()),
+        in_specs=(P(dist.ens_axes, dist.ring_axis), P(), P()),
         out_specs=(P(dist.ens_axes, dist.ring_axis), P(dist.ens_axes),
                    (P(None, dist.ens_axes),) * 3),
+        check_rep=False,
     )
-    tau0 = jnp.zeros((n_trials, cfg.L), dtype=dtype)
-    tau, off, (u, w2, gvt) = jax.jit(shard_fn)(tau0, jnp.uint32(seed))
+    if tau0 is None:
+        tau0 = jnp.zeros((n_trials, cfg.L), dtype=dtype)
+    tau, off, (u, w2, gvt) = jax.jit(shard_fn)(
+        tau0, jnp.uint32(seed), jnp.int32(step_base))
     stats = {"u": u[:n_steps], "w2": w2[:n_steps], "gvt": gvt[:n_steps]}
     return tau + off[:, None], stats
 
@@ -244,15 +240,17 @@ def lower_sharded(
     """Lower (no execution) for the multi-pod dry-run / roofline of the core."""
     fn = functools.partial(
         _shard_body, cfg=cfg, dist=dist, n_steps=n_steps, L_total=cfg.L)
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         fn,
         mesh=mesh,
-        in_specs=(P(dist.ens_axes, dist.ring_axis), P()),
+        in_specs=(P(dist.ens_axes, dist.ring_axis), P(), P()),
         out_specs=(P(dist.ens_axes, dist.ring_axis), P(dist.ens_axes),
                    (P(None, dist.ens_axes),) * 3),
+        check_rep=False,
     )
     tau0 = jax.ShapeDtypeStruct((n_trials, cfg.L), dtype)
-    return jax.jit(shard_fn).lower(tau0, jax.ShapeDtypeStruct((), jnp.uint32))
+    return jax.jit(shard_fn).lower(tau0, jax.ShapeDtypeStruct((), jnp.uint32),
+                                   jax.ShapeDtypeStruct((), jnp.int32))
 
 
 # ---------------------------------------------------------------------------

@@ -54,18 +54,35 @@ def steady_state(
     seed: int = 0,
     burn_in_steps: int | None = None,
     measure_steps: int | None = None,
+    backend: str | None = None,
+    engine_opts: dict | None = None,
 ) -> SteadyState:
-    """Burn in, then time-average StepStats over ``measure_steps``."""
+    """Burn in, then time-average StepStats over ``measure_steps``.
+
+    ``backend=None`` keeps the legacy jax.random-keyed ``horizon`` scan
+    (trajectories identical to prior releases); any engine backend name
+    ("reference", "pallas", "pallas_multistep", "sharded") routes through
+    ``PDESEngine`` on the counter event stream — statistically equivalent,
+    and the fused backends are the fast path at scale.  ``engine_opts`` is
+    forwarded to the ``PDESEngine`` constructor (window, k_fuse, mesh, ...).
+    """
     if burn_in_steps is None:
         burn_in_steps = default_burn_in(cfg)
     if measure_steps is None:
         measure_steps = max(200, burn_in_steps // 4)
-    key = jax.random.key(seed)
-    k_burn, k_meas = jax.random.split(key)
-    state = horizon.init_state(cfg, n_trials)
-    state = horizon.burn_in(state, k_burn, cfg, burn_in_steps)
-    g0 = np.asarray(state.offset)  # GVT at measurement start (tau rebased)
-    state, stats = horizon.run_mean(state, k_meas, cfg, measure_steps)
+    if backend is None:
+        key = jax.random.key(seed)
+        k_burn, k_meas = jax.random.split(key)
+        state = horizon.init_state(cfg, n_trials)
+        state = horizon.burn_in(state, k_burn, cfg, burn_in_steps)
+        g0 = np.asarray(state.offset)  # GVT at measurement start (tau rebased)
+        state, stats = horizon.run_mean(state, k_meas, cfg, measure_steps)
+    else:
+        from .engine import PDESEngine
+        eng = PDESEngine(cfg, backend=backend, **(engine_opts or {}))
+        state = eng.burn_in(eng.init(n_trials), seed, burn_in_steps)
+        g0 = np.asarray(state.offset) + np.asarray(state.tau).min(axis=-1)
+        state, stats = eng.run_mean(state, seed, measure_steps)
     u = np.asarray(stats.utilization)
     w2 = np.asarray(stats.w2)
     g1 = np.asarray(state.offset) + np.asarray(state.tau).min(axis=-1)
@@ -93,6 +110,8 @@ def utilization_vs_L(
     seed: int = 0,
     burn_in_steps: int | None = None,
     measure_steps: int | None = None,
+    backend: str | None = None,
+    engine_opts: dict | None = None,
 ):
     """Steady-state utilization for a range of ring sizes (Figs. 2, 5)."""
     out = []
@@ -105,6 +124,8 @@ def utilization_vs_L(
                 seed=seed + i,
                 burn_in_steps=burn_in_steps,
                 measure_steps=measure_steps,
+                backend=backend,
+                engine_opts=engine_opts,
             )
         )
     return out
@@ -116,14 +137,22 @@ def width_evolution(
     n_steps: int,
     n_trials: int = 64,
     seed: int = 0,
+    backend: str | None = None,
+    engine_opts: dict | None = None,
 ):
     """Full <w(t)>, <w_a(t)>, <u(t)> series (Figs. 2, 4, 8).
 
-    Returns dict of numpy arrays with leading time axis.
+    Returns dict of numpy arrays with leading time axis.  ``backend`` routes
+    through ``PDESEngine`` exactly as in ``steady_state``.
     """
-    key = jax.random.key(seed)
-    state = horizon.init_state(cfg, n_trials)
-    _, stats = horizon.run(state, key, cfg, n_steps)
+    if backend is None:
+        key = jax.random.key(seed)
+        state = horizon.init_state(cfg, n_trials)
+        _, stats = horizon.run(state, key, cfg, n_steps)
+    else:
+        from .engine import PDESEngine
+        eng = PDESEngine(cfg, backend=backend, **(engine_opts or {}))
+        _, stats = eng.run(eng.init(n_trials), seed, n_steps)
     w2 = np.asarray(stats.w2)
     return {
         "t": np.arange(1, n_steps + 1),

@@ -10,25 +10,60 @@ generator indexed by global coordinates, not a stateful stream.
 (seed, step, trial, pe, word).  It is not cryptographic, but passes the
 statistical demands of this physics (exponential increments, uniform site
 picks) — verified against jax.random moments in tests/test_properties.py.
+
+All constants are *numpy* uint32 scalars (not jnp arrays) so ``counter_words``
+can run **inside a Pallas kernel body**: kernel functions may not capture
+traced constants, and np scalars embed as literals.  The multistep engine
+backend exploits this to generate its event stream in VMEM — no bits array
+ever touches HBM (kernels/pdes_multistep.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-_C1 = jnp.uint32(0x85EBCA6B)
-_C2 = jnp.uint32(0xC2B2AE35)
-_GOLDEN = jnp.uint32(0x9E3779B9)
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+_STEP_C = np.uint32(0x27D4EB2F)
+_TRIAL_C = np.uint32(0x165667B1)
+_PE_C = np.uint32(0xD3A2646C)
+_W0_C = np.uint32(0x68E31DA4)
+_W1_C = np.uint32(0xB5297A4D)
 
 
 def _mix(h: jax.Array) -> jax.Array:
     """murmur3 fmix32: full-avalanche 32-bit finalizer."""
-    h = h ^ (h >> jnp.uint32(16))
+    h = h ^ (h >> np.uint32(16))
     h = h * _C1
-    h = h ^ (h >> jnp.uint32(13))
+    h = h ^ (h >> np.uint32(13))
     h = h * _C2
-    h = h ^ (h >> jnp.uint32(16))
+    h = h ^ (h >> np.uint32(16))
     return h
+
+
+def counter_words(
+    seed: jax.Array,
+    step: jax.Array,
+    trial_idx: jax.Array,
+    pe_idx: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """The two uint32 event words for global coordinates, unstacked.
+
+    All inputs must already be uint32 (arrays broadcast against each other).
+    Kernel-safe: plain uint32 arithmetic with literal constants, so Pallas
+    bodies can call it on ``broadcasted_iota`` index planes and a scalar
+    (seed, step) prefetched from SMEM/VMEM.
+    """
+    # sequential absorb rounds: each input is decorrelated by a full mix
+    h = _mix(seed ^ _GOLDEN)
+    h = _mix(h ^ (step * _STEP_C))
+    h = _mix(h ^ (trial_idx * _TRIAL_C))
+    h = _mix(h ^ (pe_idx * _PE_C))
+    w0 = _mix(h ^ _W0_C)
+    w1 = _mix(h ^ _W1_C)
+    return w0, w1
 
 
 def counter_bits(
@@ -48,17 +83,12 @@ def counter_bits(
     Returns: uint32 array of shape broadcast + (2,), matching the layout of
       ``horizon.event_bits`` output (word 0 -> site pick, word 1 -> eta).
     """
-    seed = jnp.uint32(seed)
-    step = step.astype(jnp.uint32)
-    b = trial_idx.astype(jnp.uint32)
-    l = pe_idx.astype(jnp.uint32)
-    # sequential absorb rounds: each input is decorrelated by a full mix
-    h = _mix(seed ^ _GOLDEN)
-    h = _mix(h ^ (step * jnp.uint32(0x27D4EB2F)))
-    h = _mix(h ^ (b * jnp.uint32(0x165667B1)))
-    h = _mix(h ^ (l * jnp.uint32(0xD3A2646C)))
-    w0 = _mix(h ^ jnp.uint32(0x68E31DA4))
-    w1 = _mix(h ^ jnp.uint32(0xB5297A4D))
+    w0, w1 = counter_words(
+        jnp.uint32(seed),
+        step.astype(jnp.uint32),
+        trial_idx.astype(jnp.uint32),
+        pe_idx.astype(jnp.uint32),
+    )
     return jnp.stack(jnp.broadcast_arrays(w0, w1), axis=-1)
 
 

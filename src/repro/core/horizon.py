@@ -116,19 +116,70 @@ def event_bits(key: jax.Array, step: jax.Array, shape: tuple[int, ...]) -> jax.A
     return jax.random.bits(k, shape + (2,), dtype=jnp.uint32)
 
 
-def decode_events(bits: jax.Array, cfg: PDESConfig):
-    """bits ``(..., 2)`` -> (is_left, is_right, eta).
+def decode_words(w0: jax.Array, w1: jax.Array, n_v: int, dtype):
+    """Event decode from two uint32 words -> (is_left, is_right, eta).
 
-    site ~ Uniform{0..n_v-1} from bits[...,0] (modulo; bias < 2**-16 for the
-    paper's n_v range), eta ~ Exp(1) from bits[...,1] via inverse CDF.
+    site ~ Uniform{0..n_v-1} from ``w0`` (modulo; bias < 2**-16 for the
+    paper's n_v range), eta ~ Exp(1) from ``w1`` via inverse CDF.
+
+    This is THE event decode: the reference scan, both Pallas kernel bodies,
+    and the sharded runtime all call it, so every backend interprets the
+    event stream identically (bit-exact trajectories by construction).
+    Pure jnp on plain arrays — safe inside Pallas kernel bodies.
     """
-    site = jnp.remainder(bits[..., 0], jnp.uint32(cfg.n_v)).astype(jnp.int32)
+    site = jnp.remainder(w0, jnp.uint32(n_v)).astype(jnp.int32)
     is_left = site == 0
-    is_right = site == (cfg.n_v - 1)
+    is_right = site == (n_v - 1)
     # uniform in (0, 1]: use the top 24 bits, then add 2^-25 to avoid log(0).
-    u = (bits[..., 1] >> jnp.uint32(8)).astype(cfg.dtype) * cfg.dtype(2.0**-24)
-    eta = -jnp.log(u + cfg.dtype(2.0**-25))
+    u = (w1 >> jnp.uint32(8)).astype(dtype) * 2.0**-24
+    eta = -jnp.log(u + 2.0**-25)
     return is_left, is_right, eta
+
+
+def decode_events(bits: jax.Array, cfg: PDESConfig):
+    """bits ``(..., 2)`` -> (is_left, is_right, eta) (see ``decode_words``)."""
+    return decode_words(bits[..., 0], bits[..., 1], cfg.n_v, cfg.dtype)
+
+
+def conservative_update(
+    tau: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    is_left: jax.Array,
+    is_right: jax.Array,
+    eta: jax.Array,
+    gvt: jax.Array,
+    *,
+    delta: float,
+    rd_mode: bool = False,
+    border_both: bool = False,
+):
+    """Causality rule Eq. (1) + window rule Eq. (3) + update, in one place.
+
+    ``left``/``right`` are the neighbor values however the caller obtained
+    them (rolls on a full ring, halo columns on a shard, VMEM-resident rolls
+    inside a kernel).  ``gvt`` is the window base — exact current minimum or
+    a stale/conservative bound — and is ignored when ``delta`` is inf.
+
+    Returns ``(tau_next, update)``.  Pure jnp — shared by the reference
+    scan (``step_core``), the Pallas kernel bodies, and the sharded runtime.
+    """
+    if rd_mode:
+        causal_ok = jnp.ones(tau.shape, dtype=bool)
+    elif border_both:
+        is_border = is_left | is_right
+        ok = (tau <= left) & (tau <= right)
+        causal_ok = jnp.where(is_border, ok, True)
+    else:
+        ok_left = jnp.where(is_left, tau <= left, True)
+        ok_right = jnp.where(is_right, tau <= right, True)
+        causal_ok = ok_left & ok_right
+    if math.isinf(delta):
+        window_ok = jnp.ones(tau.shape, dtype=bool)
+    else:
+        window_ok = tau <= delta + gvt
+    update = causal_ok & window_ok
+    return tau + jnp.where(update, eta, 0.0), update
 
 
 # ---------------------------------------------------------------------------
@@ -163,27 +214,11 @@ def step_core(
     """
     left_nbr = jnp.roll(tau, 1, axis=-1)    # tau_{k-1}
     right_nbr = jnp.roll(tau, -1, axis=-1)  # tau_{k+1}
-
-    if cfg.rd_mode:
-        causal_ok = jnp.ones(tau.shape, dtype=bool)
-    elif cfg.border_both:
-        is_border = is_left | is_right
-        ok = (tau <= left_nbr) & (tau <= right_nbr)
-        causal_ok = jnp.where(is_border, ok, True)
-    else:
-        ok_left = jnp.where(is_left, tau <= left_nbr, True)
-        ok_right = jnp.where(is_right, tau <= right_nbr, True)
-        causal_ok = ok_left & ok_right
-
     gvt = jnp.min(tau, axis=-1, keepdims=True)  # (B, 1) exact global minimum
-    if math.isinf(cfg.delta):
-        window_ok = jnp.ones(tau.shape, dtype=bool)
-    else:
-        base = gvt if gvt_for_window is None else gvt_for_window
-        window_ok = tau <= cfg.dtype(cfg.delta) + base
-
-    update = causal_ok & window_ok
-    tau_next = tau + jnp.where(update, eta, cfg.dtype(0))
+    base = gvt if gvt_for_window is None else gvt_for_window
+    tau_next, update = conservative_update(
+        tau, left_nbr, right_nbr, is_left, is_right, eta, base,
+        delta=cfg.delta, rd_mode=cfg.rd_mode, border_both=cfg.border_both)
     return tau_next, update, gvt[..., 0]
 
 
@@ -200,6 +235,54 @@ def measure(tau: jax.Array, update: jax.Array, offset: jax.Array) -> StepStats:
         mean_tau=mean[..., 0] + offset,
         max_dev=jnp.max(dev, axis=-1),
         min_dev=-jnp.min(dev, axis=-1),
+    )
+
+
+#: Key order of ``ring_moments`` output — load-bearing for the kernels,
+#: which zip it against their pallas_call output refs.
+MOMENT_KEYS = ("ucount", "min", "max", "sum", "sumsq", "sumabs")
+
+
+def ring_moments(tau: jax.Array, update: jax.Array) -> dict:
+    """Per-ring partial reductions of one post-update state.
+
+    Returns the raw moments every backend records per step — ``ucount``,
+    ``min``, ``max``, ``sum``, ``sumsq``, ``sumabs`` (each reduced over the
+    last axis) — from which ``stats_from_moments`` rebuilds the full
+    ``StepStats``.  Pure jnp, usable inside Pallas kernel bodies; ``sumabs``
+    (and hence ``wa``) assumes the last axis spans a complete ring, since
+    the absolute width is measured about the ring mean.
+    """
+    dtype = tau.dtype
+    s = jnp.sum(tau, axis=-1)
+    mean = s / tau.shape[-1]
+    return dict(
+        ucount=jnp.sum(update.astype(dtype), axis=-1),
+        min=jnp.min(tau, axis=-1),
+        max=jnp.max(tau, axis=-1),
+        sum=s,
+        sumsq=jnp.sum(tau * tau, axis=-1),
+        sumabs=jnp.sum(jnp.abs(tau - mean[..., None]), axis=-1),
+    )
+
+
+def stats_from_moments(moments: dict, offset: jax.Array, L: int) -> StepStats:
+    """Assemble ``StepStats`` from ``ring_moments`` output.
+
+    ``offset`` is the accumulated rebasing offset, broadcastable against the
+    moment arrays (e.g. ``off[None, :]`` for per-chunk ``(K, B)`` moments).
+    The single place where moment post-processing lives — the engine, the
+    kernel-path driver, and the benchmarks all route through it.
+    """
+    mean = moments["sum"] / L
+    return StepStats(
+        utilization=moments["ucount"] / L,
+        w2=moments["sumsq"] / L - mean * mean,
+        wa=moments["sumabs"] / L,
+        gvt=moments["min"] + offset,
+        mean_tau=mean + offset,
+        max_dev=moments["max"] - mean,
+        min_dev=mean - moments["min"],
     )
 
 

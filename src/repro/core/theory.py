@@ -21,19 +21,45 @@ KPZ_BETA = 1.0 / 3.0
 RD_BETA = 0.5
 
 
+def _finite_domain(d):
+    """Mask the fit formulas' singular endpoints (Δ=0, Δ=inf, NaN).
+
+    The rational fits divide by powers of Δ: at Δ=0 both ``c/d**e`` terms
+    are inf and their difference is NaN (a real invalid-subtract at extreme
+    Δ, not just noise), and Δ=inf needs no formula at all.  Evaluate on a
+    substituted safe value and let the caller select the analytic limit.
+    """
+    ok = np.isfinite(d) & (d > 0)
+    return ok, np.where(ok, d, 1.0)
+
+
+def _masked_limits(d, ok, val):
+    """Recombine: fit where valid, analytic limits at Δ=0 / Δ=+inf.
+
+    NaN and negative Δ stay NaN — bad inputs must surface, not read as
+    full utilization.
+    """
+    lim = np.where(d == 0, 0.0, np.where(d == np.inf, 1.0, np.nan))
+    return np.where(ok, val, lim)
+
+
 def u_rd(delta, four_point: bool = True):
     """Eq. (A.1): utilization of Δ-constrained random deposition, L -> inf.
 
     Four-point fit: ±2% over 0 <= Δ < inf; two-point: ±2.5%.
+    Limits are handled explicitly (no NaN intermediates, no warnings):
+    ``u_rd(0) = 0`` (window closed) and ``u_rd(inf) = 1`` (window off).
     """
     d = np.asarray(delta, dtype=np.float64)
     if four_point:
         c3, e3, c4, e4 = 15.8, 1.07, 12.3, 1.18
     else:
         c3, e3, c4, e4 = 3.47, 0.84, 0.0, 1.0
-    with np.errstate(divide="ignore"):
-        val = 1.0 / (1.0 + c3 / d**e3 - c4 / d**e4)
-    return np.where(d == 0, 0.0, val)
+    ok, ds = _finite_domain(d)
+    # clip: utilization is physical — the four-point denominator flips sign
+    # below Δ ~ 1e-10, where the fit means u = 0 anyway
+    val = np.clip(1.0 / (1.0 + c3 / ds**e3 - c4 / ds**e4), 0.0, 1.0)
+    return _masked_limits(d, ok, val)
 
 
 def u_kpz(n_v, four_point: bool = True):
@@ -57,19 +83,18 @@ def p_exponent(delta, n_v=None):
     (A.3) with the paper's constants.
     """
     d = np.asarray(delta, dtype=np.float64)
+    ok, ds = _finite_domain(d)
     if n_v is None:
-        with np.errstate(divide="ignore"):
-            val = 1.0 / (1.0 + 2.0 / d**0.75)
-        return np.where(d == 0, 0.0, val)
+        val = 1.0 / (1.0 + 2.0 / ds**0.75)
+        return _masked_limits(d, ok, val)
     n = np.asarray(n_v, dtype=np.float64)
     # piecewise constants from the Appendix
     c5 = np.where(n >= 100, 528.4, np.where(n < 10, 17.43, 5.345))
     e5 = np.where(n >= 100, 1.487, np.where(n < 10, 1.406, 0.627))
     c6 = np.where(n >= 100, 515.1, np.where(n < 10, 15.3, 0.095))
     e6 = np.where(n >= 100, 1.609, np.where(n < 10, 1.687, 0.045))
-    with np.errstate(divide="ignore"):
-        val = 1.0 / (1.0 + c5 / d**e5 - c6 / d**e6)
-    return np.where(d == 0, 0.0, val)
+    val = np.clip(1.0 / (1.0 + c5 / ds**e5 - c6 / ds**e6), 0.0, 1.0)
+    return _masked_limits(d, ok, val)
 
 
 def u_composite(n_v, delta, four_point: bool = True):

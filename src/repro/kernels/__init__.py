@@ -1,2 +1,10 @@
 """Pallas TPU kernels for the PDES hot loop (validated in interpret mode on CPU)."""
-from .ops import pdes_step, pdes_multistep, step_ring, simulate, ring_halo  # noqa: F401
+from .ops import (  # noqa: F401
+    pdes_multistep,
+    pdes_multistep_counter,
+    pdes_step,
+    pick_block_b,
+    ring_halo,
+    simulate,
+    step_ring,
+)

@@ -7,15 +7,15 @@ for the pure-XLA path — cross-validated in tests/test_kernels.py.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 
 from ..core import horizon
 from ..core.horizon import PDESConfig
+from . import tiling
 from .pdes_step import pdes_step
-from .pdes_multistep import pdes_multistep
+from .pdes_multistep import pdes_multistep, pdes_multistep_counter
 
 
 def ring_halo(tau: jax.Array) -> jax.Array:
@@ -48,7 +48,11 @@ def simulate(state: horizon.SimState, key: jax.Array, cfg: PDESConfig,
 
     Runs ``n_steps`` in K-fused chunks via ``pdes_multistep``; emits per-step
     (utilization, w2, gvt) derived from the kernel's fused partial reductions
-    (wa requires a second pass and is not produced by this path).
+    through the shared ``horizon.stats_from_moments`` post-processing.
+
+    Kept for the jax.random (threefry) event stream; the counter-stream
+    engine (``repro.core.engine.PDESEngine``) supersedes this as the one
+    entry point for multi-backend runs.
 
     Returns (final SimState, dict of (n_steps, B) arrays: u, w2, gvt).
     """
@@ -61,18 +65,15 @@ def simulate(state: horizon.SimState, key: jax.Array, cfg: PDESConfig,
         # event bits for the k steps, keyed exactly like horizon._one_step
         steps = step0 + jnp.arange(k, dtype=jnp.int32)
         bits = jax.vmap(lambda s: horizon.event_bits(key, s, (B, L)))(steps)
-        tau, stats = pdes_multistep(
+        tau, moments = pdes_multistep(
             tau, bits, n_v=cfg.n_v, delta=cfg.delta, rd_mode=cfg.rd_mode,
             block_b=block_b, interpret=interpret)
-        u = stats["ucount"] / L                              # (k, B)
-        mean = stats["sum"] / L
-        w2 = stats["sumsq"] / L - mean * mean                # var from moments
-        gvt_abs = stats["min"] + off[None, :]
+        st = horizon.stats_from_moments(moments, off[None, :], L)
         # rebase once per chunk (fp32 hygiene; see horizon.SimState docstring)
         shift = jnp.min(tau, axis=-1)
         tau = tau - shift[:, None]
         off, comp = horizon._kahan_add(off, comp, shift)
-        return (tau, off, comp, step0 + k), (u, w2, gvt_abs)
+        return (tau, off, comp, step0 + k), (st.utilization, st.w2, st.gvt)
 
     carry = (state.tau, state.offset, state.offset_comp, state.step)
     outs = []
@@ -89,14 +90,14 @@ def simulate(state: horizon.SimState, key: jax.Array, cfg: PDESConfig,
     return horizon.SimState(tau, off, comp, step), out
 
 
-def vmem_bytes(cfg: PDESConfig, block_b: int, k_fuse: int = 1) -> int:
+def vmem_bytes(cfg: PDESConfig, block_b: int, k_fuse: int = 1,
+               in_kernel_bits: bool = False) -> int:
     """VMEM footprint estimate for tile-size selection (ops-level check).
 
-    tau tile + one step of bits + stats; must stay well under ~16 MiB.
+    Delegates to the shared model in ``kernels.tiling`` (one footprint
+    model for ops, kernels, and the engine); must stay well under ~16 MiB.
     """
-    tau_tile = block_b * (cfg.L + 2) * 4
-    bits_tile = block_b * cfg.L * 8
-    return 2 * tau_tile + bits_tile + 4 * block_b * 4
+    return tiling.vmem_bytes(cfg.L, block_b, in_kernel_bits=in_kernel_bits)
 
 
 def pick_block_b(cfg: PDESConfig, budget: int = 8 << 20) -> int:

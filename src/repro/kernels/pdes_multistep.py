@@ -1,78 +1,122 @@
-"""K-step VMEM-resident PDES kernel (Pallas, TPU target).
+"""K-step VMEM-resident PDES kernels (Pallas, TPU target).
 
 Beyond-paper optimization B2 (DESIGN.md §5): the one-step kernel is
 HBM-bandwidth-bound at ~12 bytes of traffic per PE-step (tau in/out + bits).
 Keeping the ring resident in VMEM across K steps removes the tau round trips:
 
-    traffic/step ≈ 8 bytes(bits) + 8/K bytes(tau)   → ~1.5× less at K = 16,
-    and on real TPU with in-kernel RNG (pltpu.prng_*) the bits stream also
-    disappears, leaving ~8/K bytes/PE-step — a K× intensity gain.
+    traffic/step ≈ 8 bytes(bits) + 8/K bytes(tau)   → ~1.5× less at K = 16.
+
+Two variants share one step body (``_fused_step``, built on the shared core
+in ``horizon``):
+
+* ``pdes_multistep`` — event bits streamed from HBM one step at a time
+  (arbitrary external streams, e.g. the jax.random stream of ``horizon``).
+* ``pdes_multistep_counter`` — event bits generated **inside the kernel**
+  from the counter-based stream (``events.counter_words`` on index iotas).
+  No bits array exists at all: traffic drops to ~8/K bytes/PE-step, a K×
+  intensity gain, and on CPU/interpret the murmur32 hash is far cheaper
+  than host-side threefry.  This is the engine's fast path.
 
 Because each program instance owns *entire rings* ``(block_b, L)``, the exact
-global virtual time is available locally every step (a lane-wise min), so this
-kernel implements the *paper-faithful* exact-GVT algorithm, not the stale-GVT
-approximation.
+global virtual time is available locally every step (a lane-wise min), so
+these kernels implement the *paper-faithful* exact-GVT algorithm, not the
+stale-GVT approximation.
 
 Grid/tiling: grid = (ensemble blocks, K).  The K dimension is sequential
 ("arbitrary"): the tau tile is revisited — written at step k, re-read at
 k + 1 — which Pallas guarantees for the same output block across grid steps.
-Event bits are streamed one step at a time as ``(1, block_b, L, 2)`` tiles so
-VMEM holds only one step's bits regardless of K.
 """
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.events import counter_words
+from ..core.horizon import (MOMENT_KEYS as STAT_KEYS, conservative_update,
+                            decode_words, ring_moments)
+from .tiling import pick_divisor_block
 
-def _kernel(tau_in_ref, bits_ref, tau_ref, ucount_ref, min_ref, sum_ref,
-            sumsq_ref, *, n_v: int, delta: float, rd_mode: bool):
+
+def _fused_step(tau, w0, w1, *, n_v, delta, rd_mode, border_both):
+    """One in-VMEM update on full rings; returns (tau_next, moments)."""
+    is_left, is_right, eta = decode_words(w0, w1, n_v, tau.dtype)
+    left = jnp.roll(tau, 1, axis=-1)        # periodic: full ring resident
+    right = jnp.roll(tau, -1, axis=-1)
+    gvt = jnp.min(tau, axis=-1, keepdims=True)   # exact GVT, in-VMEM
+    tau_next, update = conservative_update(
+        tau, left, right, is_left, is_right, eta, gvt,
+        delta=delta, rd_mode=rd_mode, border_both=border_both)
+    return tau_next, ring_moments(tau_next, update)
+
+
+def _write_step(tau_ref, stat_refs, tau_next, moments):
+    tau_ref[...] = tau_next
+    for key, ref in zip(STAT_KEYS, stat_refs):
+        ref[...] = moments[key][None, :]
+
+
+def _kernel_bits(tau_in_ref, bits_ref, tau_ref, *stat_refs,
+                 n_v: int, delta: float, rd_mode: bool, border_both: bool):
     k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         tau_ref[...] = tau_in_ref[...]
 
-    dtype = tau_ref.dtype
     tau = tau_ref[...]                      # (b, L) full rings
     bits = bits_ref[0]                      # (b, L, 2) this step's events
+    tau_next, moments = _fused_step(
+        tau, bits[..., 0], bits[..., 1],
+        n_v=n_v, delta=delta, rd_mode=rd_mode, border_both=border_both)
+    _write_step(tau_ref, stat_refs, tau_next, moments)
 
-    site = jnp.remainder(bits[..., 0], jnp.uint32(n_v)).astype(jnp.int32)
-    is_left = site == 0
-    is_right = site == (n_v - 1)
-    u = (bits[..., 1] >> jnp.uint32(8)).astype(dtype) * 2.0**-24
-    eta = -jnp.log(u + 2.0**-25)
 
-    left = jnp.roll(tau, 1, axis=-1)        # periodic: full ring resident
-    right = jnp.roll(tau, -1, axis=-1)
-    if rd_mode:
-        causal_ok = jnp.ones(tau.shape, dtype=bool)
-    else:
-        ok_l = jnp.where(is_left, tau <= left, True)
-        ok_r = jnp.where(is_right, tau <= right, True)
-        causal_ok = ok_l & ok_r
-    if math.isinf(delta):
-        window_ok = jnp.ones(tau.shape, dtype=bool)
-    else:
-        gvt = jnp.min(tau, axis=-1, keepdims=True)   # exact GVT, in-VMEM
-        window_ok = tau <= delta + gvt
-    update = causal_ok & window_ok
-    tau_next = tau + jnp.where(update, eta, 0.0)
+def _kernel_counter(ctr_ref, tau_in_ref, tau_ref, *stat_refs,
+                    n_v: int, delta: float, rd_mode: bool, border_both: bool,
+                    block_b: int):
+    k = pl.program_id(1)
 
-    tau_ref[...] = tau_next
-    ucount_ref[...] = jnp.sum(update.astype(dtype), axis=-1)[None, :]
-    min_ref[...] = jnp.min(tau_next, axis=-1)[None, :]
-    sum_ref[...] = jnp.sum(tau_next, axis=-1)[None, :]
-    sumsq_ref[...] = jnp.sum(tau_next * tau_next, axis=-1)[None, :]
+    @pl.when(k == 0)
+    def _init():
+        tau_ref[...] = tau_in_ref[...]
+
+    tau = tau_ref[...]                      # (b, L) full rings
+    b, L = tau.shape
+    seed, step0, b0, l0 = (ctr_ref[0, i] for i in range(4))
+    step = step0 + k.astype(jnp.uint32)
+    row0 = (pl.program_id(0) * block_b).astype(jnp.uint32)
+    bi = b0 + row0 + jax.lax.broadcasted_iota(jnp.uint32, (b, L), 0)
+    li = l0 + jax.lax.broadcasted_iota(jnp.uint32, (b, L), 1)
+    w0, w1 = counter_words(seed, step, bi, li)
+    tau_next, moments = _fused_step(
+        tau, w0, w1,
+        n_v=n_v, delta=delta, rd_mode=rd_mode, border_both=border_both)
+    _write_step(tau_ref, stat_refs, tau_next, moments)
+
+
+def _call_multistep(kern, inputs, in_specs, B, L, K, bb, dtype, interpret):
+    out_shape = [jax.ShapeDtypeStruct((B, L), dtype)] + [
+        jax.ShapeDtypeStruct((K, B), dtype) for _ in STAT_KEYS]
+    row = pl.BlockSpec((1, bb), lambda i, k: (k, i))
+    outs = pl.pallas_call(
+        kern,
+        grid=(B // bb, K),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((bb, L), lambda i, k: (i, 0))]
+        + [row] * len(STAT_KEYS),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+    return outs[0], dict(zip(STAT_KEYS, outs[1:]))
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_v", "delta", "rd_mode", "block_b", "interpret"),
+    static_argnames=("n_v", "delta", "rd_mode", "border_both", "block_b",
+                     "interpret"),
 )
 def pdes_multistep(
     tau: jax.Array,
@@ -81,50 +125,74 @@ def pdes_multistep(
     n_v: int,
     delta: float,
     rd_mode: bool = False,
+    border_both: bool = False,
     block_b: int = 8,
     interpret: bool = True,
 ):
-    """K fused exact-GVT PDES steps on full rings.
+    """K fused exact-GVT PDES steps on full rings, bits streamed from HBM.
 
     Args:
       tau: (B, L) full rings (periodic).
       bits: (K, B, L, 2) uint32 event bits for the K steps.
 
     Returns:
-      (tau_final (B, L), stats dict of (K, B): ucount, min, sum, sumsq),
-      per-step stats measured after each step's update.
+      (tau_final (B, L), stats dict of (K, B): ucount/min/max/sum/sumsq/
+      sumabs), per-step stats measured after each step's update.
     """
     B, L = tau.shape
     K = bits.shape[0]
     assert bits.shape == (K, B, L, 2)
-    bb = min(block_b, B)
-    while B % bb:
-        bb -= 1
-    grid = (B // bb, K)
-    kern = functools.partial(_kernel, n_v=n_v, delta=delta, rd_mode=rd_mode)
-    out_shape = [
-        jax.ShapeDtypeStruct((B, L), tau.dtype),
-        jax.ShapeDtypeStruct((K, B), tau.dtype),
-        jax.ShapeDtypeStruct((K, B), tau.dtype),
-        jax.ShapeDtypeStruct((K, B), tau.dtype),
-        jax.ShapeDtypeStruct((K, B), tau.dtype),
+    bb = pick_divisor_block(B, block_b)
+    kern = functools.partial(_kernel_bits, n_v=n_v, delta=delta,
+                             rd_mode=rd_mode, border_both=border_both)
+    in_specs = [
+        pl.BlockSpec((bb, L), lambda i, k: (i, 0)),
+        pl.BlockSpec((1, bb, L, 2), lambda i, k: (k, i, 0, 0)),
     ]
-    tau_final, ucount, mn, sm, ssq = pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, L), lambda i, k: (i, 0)),
-            pl.BlockSpec((1, bb, L, 2), lambda i, k: (k, i, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bb, L), lambda i, k: (i, 0)),
-            pl.BlockSpec((1, bb), lambda i, k: (k, i)),
-            pl.BlockSpec((1, bb), lambda i, k: (k, i)),
-            pl.BlockSpec((1, bb), lambda i, k: (k, i)),
-            pl.BlockSpec((1, bb), lambda i, k: (k, i)),
-        ],
-        out_shape=out_shape,
-        interpret=interpret,
-    )(tau, bits)
-    stats = dict(ucount=ucount, min=mn, sum=sm, sumsq=ssq)
-    return tau_final, stats
+    return _call_multistep(kern, (tau, bits), in_specs, B, L, K, bb,
+                           tau.dtype, interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_steps", "n_v", "delta", "rd_mode", "border_both",
+                     "block_b", "interpret"),
+)
+def pdes_multistep_counter(
+    tau: jax.Array,
+    ctr: jax.Array,
+    *,
+    k_steps: int,
+    n_v: int,
+    delta: float,
+    rd_mode: bool = False,
+    border_both: bool = False,
+    block_b: int = 8,
+    interpret: bool = True,
+):
+    """K fused exact-GVT steps with the event stream generated in-kernel.
+
+    Args:
+      tau: (B, L) full rings (periodic).
+      ctr: (1, 4) uint32 ``[seed, step0, b0, l0]`` — counter-stream seed,
+        first step index, and global (trial, PE) offsets of this block.
+        Steps k = 0..k_steps-1 consume stream step ``step0 + k``; the
+        trajectory is bit-identical to feeding ``events.counter_bits`` into
+        ``pdes_multistep``.
+      k_steps: number of fused steps (static).
+
+    Returns: same as ``pdes_multistep``.
+    """
+    B, L = tau.shape
+    assert ctr.shape == (1, 4) and ctr.dtype == jnp.uint32, (ctr.shape,
+                                                             ctr.dtype)
+    bb = pick_divisor_block(B, block_b)
+    kern = functools.partial(_kernel_counter, n_v=n_v, delta=delta,
+                             rd_mode=rd_mode, border_both=border_both,
+                             block_b=bb)
+    in_specs = [
+        pl.BlockSpec((1, 4), lambda i, k: (0, 0)),
+        pl.BlockSpec((bb, L), lambda i, k: (i, 0)),
+    ]
+    return _call_multistep(kern, (ctr, tau), in_specs, B, L, k_steps, bb,
+                           tau.dtype, interpret)

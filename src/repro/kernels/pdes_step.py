@@ -9,7 +9,15 @@ Layout: the caller passes a *haloed* chunk ``tau`` of shape ``(B, Lc + 2)``
 whose first/last columns hold the left/right neighbor values (wrap-around
 columns for a full ring, or the halo received from neighbor shards in the
 distributed runtime).  The window base ``gvt`` is supplied by the caller
-(exact current minimum, or a stale/conservative bound — DESIGN.md B3).
+(exact current minimum, or a stale/conservative bound — DESIGN.md B3), which
+is how the engine exposes both window modes through one kernel.
+
+The update rule itself is the shared core (``horizon.decode_words`` +
+``horizon.conservative_update``) — the same traced code as the reference
+scan and the sharded runtime, so cross-backend bit-parity is structural.
+Per-row stats are the shared ``horizon.ring_moments`` reductions; ``sumabs``
+is about the tile-local mean and is meaningful when the tile spans a full
+ring (always the case for the engine and ``ops.step_ring``).
 
 Grid/tiling: grid is over ensemble-row blocks; each program instance owns a
 ``(block_b, Lc + 2)`` VMEM tile.  Row blocks are independent, so the grid is
@@ -25,51 +33,38 @@ discussion in EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.horizon import (MOMENT_KEYS as STAT_KEYS, conservative_update,
+                            decode_words, ring_moments)
+from .tiling import pick_divisor_block
 
-def _kernel(tau_ref, bits_ref, gvt_ref, out_ref, ucount_ref, min_ref,
-            sum_ref, sumsq_ref, *, n_v: int, delta: float, rd_mode: bool):
-    dtype = out_ref.dtype
+
+def _kernel(tau_ref, bits_ref, gvt_ref, out_ref, *stat_refs,
+            n_v: int, delta: float, rd_mode: bool, border_both: bool):
     tau_h = tau_ref[...]                      # (b, Lc + 2) haloed
     tau = tau_h[:, 1:-1]
-    left = tau_h[:, :-2]
-    right = tau_h[:, 2:]
     bits = bits_ref[...]                      # (b, Lc, 2) uint32
 
-    site = jnp.remainder(bits[..., 0], jnp.uint32(n_v)).astype(jnp.int32)
-    is_left = site == 0
-    is_right = site == (n_v - 1)
-    u = (bits[..., 1] >> jnp.uint32(8)).astype(dtype) * 2.0**-24
-    eta = -jnp.log(u + 2.0**-25)
-
-    if rd_mode:
-        causal_ok = jnp.ones(tau.shape, dtype=bool)
-    else:
-        ok_l = jnp.where(is_left, tau <= left, True)
-        ok_r = jnp.where(is_right, tau <= right, True)
-        causal_ok = ok_l & ok_r
-    if math.isinf(delta):
-        window_ok = jnp.ones(tau.shape, dtype=bool)
-    else:
-        window_ok = tau <= delta + gvt_ref[...]  # (b, 1) broadcast
-    update = causal_ok & window_ok
-    tau_next = tau + jnp.where(update, eta, 0.0)
+    is_left, is_right, eta = decode_words(
+        bits[..., 0], bits[..., 1], n_v, out_ref.dtype)
+    tau_next, update = conservative_update(
+        tau, tau_h[:, :-2], tau_h[:, 2:], is_left, is_right, eta,
+        gvt_ref[...],                         # (b, 1) broadcast window base
+        delta=delta, rd_mode=rd_mode, border_both=border_both)
 
     out_ref[...] = tau_next
-    ucount_ref[...] = jnp.sum(update.astype(dtype), axis=-1, keepdims=True)
-    min_ref[...] = jnp.min(tau_next, axis=-1, keepdims=True)
-    sum_ref[...] = jnp.sum(tau_next, axis=-1, keepdims=True)
-    sumsq_ref[...] = jnp.sum(tau_next * tau_next, axis=-1, keepdims=True)
+    moments = ring_moments(tau_next, update)
+    for key, ref in zip(STAT_KEYS, stat_refs):
+        ref[...] = moments[key][:, None]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_v", "delta", "rd_mode", "block_b", "interpret"),
+    static_argnames=("n_v", "delta", "rd_mode", "border_both", "block_b",
+                     "interpret"),
 )
 def pdes_step(
     tau_haloed: jax.Array,
@@ -79,6 +74,7 @@ def pdes_step(
     n_v: int,
     delta: float,
     rd_mode: bool = False,
+    border_both: bool = False,
     block_b: int = 8,
     interpret: bool = True,
 ):
@@ -92,41 +88,32 @@ def pdes_step(
       interpret: run the kernel body in interpret mode (CPU validation).
 
     Returns:
-      (tau_next (B, Lc), stats dict of (B,): ucount, min, sum, sumsq).
+      (tau_next (B, Lc), stats dict of (B,): ucount/min/max/sum/sumsq/sumabs).
     """
     B, Lc2 = tau_haloed.shape
     Lc = Lc2 - 2
     assert bits.shape == (B, Lc, 2), (bits.shape, (B, Lc, 2))
     assert gvt.shape == (B, 1)
-    bb = min(block_b, B)
-    while B % bb:
-        bb -= 1
+    bb = pick_divisor_block(B, block_b)
     grid = (B // bb,)
-    kern = functools.partial(_kernel, n_v=n_v, delta=delta, rd_mode=rd_mode)
-    out_shape = [
-        jax.ShapeDtypeStruct((B, Lc), tau_haloed.dtype),
-        jax.ShapeDtypeStruct((B, 1), tau_haloed.dtype),
-        jax.ShapeDtypeStruct((B, 1), tau_haloed.dtype),
-        jax.ShapeDtypeStruct((B, 1), tau_haloed.dtype),
-        jax.ShapeDtypeStruct((B, 1), tau_haloed.dtype),
-    ]
-    tau_next, ucount, mn, sm, ssq = pl.pallas_call(
+    kern = functools.partial(_kernel, n_v=n_v, delta=delta, rd_mode=rd_mode,
+                             border_both=border_both)
+    out_shape = [jax.ShapeDtypeStruct((B, Lc), tau_haloed.dtype)] + [
+        jax.ShapeDtypeStruct((B, 1), tau_haloed.dtype) for _ in STAT_KEYS]
+    col = pl.BlockSpec((bb, 1), lambda i: (i, 0))
+    outs = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, Lc2), lambda i: (i, 0)),
             pl.BlockSpec((bb, Lc, 2), lambda i: (i, 0, 0)),
-            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            col,
         ],
-        out_specs=[
-            pl.BlockSpec((bb, Lc), lambda i: (i, 0)),
-            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
-            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
-            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
-            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
-        ],
+        out_specs=[pl.BlockSpec((bb, Lc), lambda i: (i, 0))]
+        + [col] * len(STAT_KEYS),
         out_shape=out_shape,
         interpret=interpret,
     )(tau_haloed, bits, gvt)
-    stats = dict(ucount=ucount[:, 0], min=mn[:, 0], sum=sm[:, 0], sumsq=ssq[:, 0])
+    tau_next = outs[0]
+    stats = {k: v[:, 0] for k, v in zip(STAT_KEYS, outs[1:])}
     return tau_next, stats

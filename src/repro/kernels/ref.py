@@ -1,25 +1,24 @@
 """Pure-jnp oracles for the Pallas PDES kernels.
 
-Each function mirrors the corresponding kernel's arithmetic *exactly*
-(same event decode, same op order) so the kernel tests can assert bitwise
-or near-bitwise equality.
+Each function mirrors the corresponding kernel's arithmetic *exactly* — by
+construction, since both sides call the shared update core in
+``repro.core.horizon`` (``decode_words`` / ``conservative_update`` /
+``ring_moments``) — so the kernel tests assert bitwise or near-bitwise
+equality and exercise only the Pallas machinery (tiling, grid revisiting,
+in-kernel event generation).
 """
 from __future__ import annotations
-
-import math
 
 import jax
 import jax.numpy as jnp
 
+from ..core.events import counter_words
+from ..core.horizon import conservative_update, decode_words, ring_moments
+
 
 def decode(bits: jnp.ndarray, n_v: int, dtype=jnp.float32):
     """bits (..., 2) uint32 -> (is_left, is_right, eta).  Mirrors the kernels."""
-    site = jnp.remainder(bits[..., 0], jnp.uint32(n_v)).astype(jnp.int32)
-    is_left = site == 0
-    is_right = site == (n_v - 1)
-    u = (bits[..., 1] >> jnp.uint32(8)).astype(dtype) * 2.0**-24
-    eta = -jnp.log(u + 2.0**-25)
-    return is_left, is_right, eta
+    return decode_words(bits[..., 0], bits[..., 1], n_v, dtype)
 
 
 def pdes_step_ref(
@@ -30,6 +29,7 @@ def pdes_step_ref(
     n_v: int,
     delta: float,
     rd_mode: bool = False,
+    border_both: bool = False,
 ):
     """Oracle for kernels.pdes_step: one step on a haloed chunk.
 
@@ -41,32 +41,29 @@ def pdes_step_ref(
 
     Returns:
       (tau_next (B, Lc), update (B, Lc) bool,
-       stats dict of (B,) arrays: ucount, min, sum, sumsq).
+       stats dict of (B,) arrays: ucount/min/max/sum/sumsq/sumabs).
     """
-    dtype = tau_haloed.dtype
     tau = tau_haloed[:, 1:-1]
-    left = tau_haloed[:, :-2]
-    right = tau_haloed[:, 2:]
-    is_left, is_right, eta = decode(bits, n_v, dtype)
-    if rd_mode:
-        causal_ok = jnp.ones(tau.shape, dtype=bool)
-    else:
-        ok_l = jnp.where(is_left, tau <= left, True)
-        ok_r = jnp.where(is_right, tau <= right, True)
-        causal_ok = ok_l & ok_r
-    if math.isinf(delta):
-        window_ok = jnp.ones(tau.shape, dtype=bool)
-    else:
-        window_ok = tau <= delta + gvt
-    update = causal_ok & window_ok
-    tau_next = tau + jnp.where(update, eta, 0.0)
-    stats = dict(
-        ucount=jnp.sum(update.astype(dtype), axis=-1),
-        min=jnp.min(tau_next, axis=-1),
-        sum=jnp.sum(tau_next, axis=-1),
-        sumsq=jnp.sum(tau_next * tau_next, axis=-1),
-    )
-    return tau_next, update, stats
+    is_left, is_right, eta = decode(bits, n_v, tau_haloed.dtype)
+    tau_next, update = conservative_update(
+        tau, tau_haloed[:, :-2], tau_haloed[:, 2:], is_left, is_right, eta,
+        gvt, delta=delta, rd_mode=rd_mode, border_both=border_both)
+    return tau_next, update, ring_moments(tau_next, update)
+
+
+def _multistep_body(n_v, delta, rd_mode, border_both, dtype):
+    def body(tau, words):
+        w0, w1 = words
+        is_left, is_right, eta = decode_words(w0, w1, n_v, dtype)
+        left = jnp.roll(tau, 1, axis=-1)
+        right = jnp.roll(tau, -1, axis=-1)
+        gvt = jnp.min(tau, axis=-1, keepdims=True)  # exact: full ring in block
+        tau_next, update = conservative_update(
+            tau, left, right, is_left, is_right, eta, gvt,
+            delta=delta, rd_mode=rd_mode, border_both=border_both)
+        return tau_next, ring_moments(tau_next, update)
+
+    return body
 
 
 def pdes_multistep_ref(
@@ -76,6 +73,7 @@ def pdes_multistep_ref(
     n_v: int,
     delta: float,
     rd_mode: bool = False,
+    border_both: bool = False,
 ):
     """Oracle for kernels.pdes_multistep: K exact-GVT steps on full rings.
 
@@ -84,36 +82,32 @@ def pdes_multistep_ref(
       bits: (K, B, L, 2) uint32 event bits.
 
     Returns:
-      (tau_final (B, L), stats dict of (K, B): ucount, min, sum, sumsq)
-      where per-step stats are measured *after* that step's update.
+      (tau_final (B, L), stats dict of (K, B): ucount/min/max/sum/sumsq/
+      sumabs) where per-step stats are measured *after* that step's update.
     """
-    dtype = tau.dtype
-    K = bits.shape[0]
+    body = _multistep_body(n_v, delta, rd_mode, border_both, tau.dtype)
+    return jax.lax.scan(body, tau, (bits[..., 0], bits[..., 1]))
 
-    def body(tau, bits_k):
-        is_left, is_right, eta = decode(bits_k, n_v, dtype)
-        left = jnp.roll(tau, 1, axis=-1)
-        right = jnp.roll(tau, -1, axis=-1)
-        if rd_mode:
-            causal_ok = jnp.ones(tau.shape, dtype=bool)
-        else:
-            ok_l = jnp.where(is_left, tau <= left, True)
-            ok_r = jnp.where(is_right, tau <= right, True)
-            causal_ok = ok_l & ok_r
-        if math.isinf(delta):
-            window_ok = jnp.ones(tau.shape, dtype=bool)
-        else:
-            gvt = jnp.min(tau, axis=-1, keepdims=True)  # exact: full ring in block
-            window_ok = tau <= delta + gvt
-        update = causal_ok & window_ok
-        tau_next = tau + jnp.where(update, eta, 0.0)
-        stats = (
-            jnp.sum(update.astype(dtype), axis=-1),
-            jnp.min(tau_next, axis=-1),
-            jnp.sum(tau_next, axis=-1),
-            jnp.sum(tau_next * tau_next, axis=-1),
-        )
-        return tau_next, stats
 
-    tau_final, (ucount, mins, sums, sumsqs) = jax.lax.scan(body, tau, bits)
-    return tau_final, dict(ucount=ucount, min=mins, sum=sums, sumsq=sumsqs)
+def pdes_multistep_counter_ref(
+    tau: jnp.ndarray,
+    ctr: jnp.ndarray,
+    *,
+    k_steps: int,
+    n_v: int,
+    delta: float,
+    rd_mode: bool = False,
+    border_both: bool = False,
+):
+    """Oracle for kernels.pdes_multistep_counter (in-kernel event stream)."""
+    B, L = tau.shape
+    seed, step0, b0, l0 = (ctr[0, i] for i in range(4))
+    bi = b0 + jnp.arange(B, dtype=jnp.uint32)[:, None]
+    li = l0 + jnp.arange(L, dtype=jnp.uint32)[None, :]
+    body = _multistep_body(n_v, delta, rd_mode, border_both, tau.dtype)
+
+    def step(tau, k):
+        w0, w1 = counter_words(seed, step0 + k, bi, li)
+        return body(tau, jnp.broadcast_arrays(w0, w1))
+
+    return jax.lax.scan(step, tau, jnp.arange(k_steps, dtype=jnp.uint32))

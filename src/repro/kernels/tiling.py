@@ -1,0 +1,37 @@
+"""Tile-size selection shared by the kernel wrappers and the engine.
+
+One footprint model and one divisor rule, so the engine, the ops-level
+budget check, and both kernel entry points can never disagree on tiling.
+"""
+from __future__ import annotations
+
+
+def pick_divisor_block(B: int, block_b: int) -> int:
+    """Largest divisor of ``B`` that is <= ``block_b`` (at least 1)."""
+    bb = max(1, min(block_b, B))
+    while B % bb:
+        bb -= 1
+    return bb
+
+
+def vmem_bytes(L: int, block_b: int, *, in_kernel_bits: bool = False) -> int:
+    """VMEM footprint estimate of one kernel tile.
+
+    tau in/out tiles + the event words + per-row stats.  With in-kernel
+    event generation (``pdes_multistep_counter``) the streamed bits tile is
+    replaced by two transient uint32 word planes — the same 8 bytes/PE of
+    VMEM, but zero HBM traffic; kept separate in case the models diverge.
+    """
+    tau_tile = block_b * (L + 2) * 4
+    words = block_b * L * 8          # (w0, w1) planes or streamed bits tile
+    stats = 6 * block_b * 4
+    return 2 * tau_tile + words + stats
+
+
+def pick_vmem_block(B: int, L: int, *, budget: int = 8 << 20,
+                    in_kernel_bits: bool = False) -> int:
+    """Largest divisor of ``B`` whose tile fits the VMEM budget."""
+    bb = B
+    while bb > 1 and vmem_bytes(L, bb, in_kernel_bits=in_kernel_bits) > budget:
+        bb = (bb + 1) // 2
+    return pick_divisor_block(B, bb)

@@ -127,13 +127,13 @@ def _dot_flops(op: Op, comp: "Computation") -> float:
         if d:
             res_elems *= int(d)
     # lhs shape: inline in args, or looked up from the producing op
-    args = op.full_text[op.full_text.find("(") + 1:]
-    first_arg = args.split(",")[0].strip()
+    arg_texts, arg_names = _split_args(op)
+    first_arg = arg_texts[0] if arg_texts else ""
     lhs_m = _SHAPE_RE.search(first_arg)
     if lhs_m:
         lhs_dims = [int(x) for x in lhs_m.group(2).split(",") if x]
     else:
-        lhs_dims = comp.shapes.get(first_arg.lstrip("%").rstrip(")"), None)
+        lhs_dims = comp.shapes.get(arg_names[0] if arg_names else None, None)
         if lhs_dims is None:
             return 2.0 * res_elems  # unknown K: floor at K=1
     contract = _dims_list(op.full_text, "lhs_contracting_dims")
@@ -158,10 +158,18 @@ def _dims_bytes(dims, dt_bytes):
 
 
 def _split_args(op: Op):
-    """Top-level operand names of an op (stripping inline shapes)."""
+    """Top-level operand names of an op (stripping inline shapes).
+
+    Splits only on commas at paren depth 1 *outside* any bracket/brace
+    nesting: shape dims (``f32[32,256]``), layouts (``{1,0}``) and tuple
+    types (``(s32[], f32[2,2])``) all contain commas that must not split —
+    miscounting here shifts operand↔parameter alignment and silently charges
+    sliced fusion params their full operand bytes.
+    """
     txt = op.full_text
     start = txt.find("(")
-    depth = 0
+    depth = 0          # paren depth ( )
+    nest = 0           # bracket/brace depth [ ] { }
     args, cur = [], []
     for ch in txt[start:]:
         if ch == "(":
@@ -173,7 +181,11 @@ def _split_args(op: Op):
             if depth == 0:
                 args.append("".join(cur).strip())
                 break
-        elif ch == "," and depth == 1:
+        elif ch in "[{":
+            nest += 1
+        elif ch in "]}":
+            nest -= 1
+        elif ch == "," and depth == 1 and nest == 0:
             args.append("".join(cur).strip())
             cur = []
             continue

@@ -9,14 +9,14 @@ from __future__ import annotations
 
 import jax
 
+from ..compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -24,8 +24,7 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     n = jax.device_count()
     if shape is None:
         shape = (1, n)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants used by the roofline analysis (DESIGN.md §7)

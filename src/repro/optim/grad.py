@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
+
 
 def quantize_int8(x, *, stochastic_key=None):
     """Symmetric per-tensor int8 quantization.  Returns (q, scale)."""
@@ -79,8 +81,8 @@ def make_compressed_dp_allreduce(mesh: Mesh, pod_axis: str = "pod"):
 
     def apply(grads, err_state):
         specs = jax.tree.map(lambda _: P(), grads)   # per-shard local view
-        f = jax.shard_map(reduce_fn, mesh=mesh,
-                          in_specs=(specs, specs), out_specs=(specs, specs))
+        f = shard_map(reduce_fn, mesh=mesh,
+                      in_specs=(specs, specs), out_specs=(specs, specs))
         return f(grads, err_state)
 
     return apply

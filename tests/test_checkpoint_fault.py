@@ -73,11 +73,11 @@ def test_elastic_restore_new_sharding(tmp_path):
     """Restore onto explicit (trivial single-device) shardings — the elastic
     path used when the mesh shape changes between runs."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import make_mesh
     _, step, state, data = _tiny_setup(tmp_path)
     p = tmp_path / "ck"
     checkpoint.save(state, p, step=0)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
     restored = checkpoint.restore(p, state, shardings)
     s2, _ = step(restored, data(0))

@@ -147,3 +147,35 @@ class TestTheory:
         # u = 1 / (1 + (δ - 2/NV) p_w); sanity at p_w = 0 -> u = 1
         assert theory.u_kpz_mean_field(10, 3.0, 0.0) == 1.0
         assert theory.u_kpz_mean_field(10, 3.0, 0.5) < 1.0
+
+    def test_extreme_delta_no_warnings(self):
+        """Regression: Δ -> 0 and Δ -> inf limits are exact and warning-free.
+
+        The rational fits used to evaluate ``c/Δ**e`` at Δ=0, producing an
+        inf - inf NaN (RuntimeWarning) before the final mask; the limits are
+        now taken analytically on a finite-domain guard.
+        """
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            for fp in (True, False):
+                assert theory.u_rd(0.0, fp) == 0.0
+                assert theory.u_rd(math.inf, fp) == 1.0
+                d = np.array([0.0, 1e-12, 1.0, 1e9, math.inf])
+                u = theory.u_rd(d, fp)
+                assert np.isfinite(u).all() and (np.diff(u) >= 0).all()
+            assert theory.p_exponent(0.0) == 0.0
+            assert theory.p_exponent(math.inf) == 1.0
+            for nv in (1, 10, 100):
+                assert theory.p_exponent(0.0, nv) == 0.0
+                assert theory.p_exponent(math.inf, nv) == 1.0
+                p = theory.p_exponent(np.array([0.0, 1e-9, 1e9, math.inf]), nv)
+                assert np.isfinite(p).all()
+            # composite surface stays finite over the whole (N_V, Δ) domain
+            u = theory.u_composite(np.array([1.0, 10.0]),
+                                   np.array([0.0, math.inf]))
+            assert np.isfinite(u).all()
+            # bad inputs surface as NaN, never as u = 1
+            assert np.isnan(theory.u_rd(np.nan))
+            assert np.isnan(theory.u_rd(-1.0))
+            assert np.isnan(theory.p_exponent(-2.0, 10))

@@ -13,12 +13,12 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json, math
     import jax, numpy as np
+    from repro.compat import make_mesh
     from repro.core.horizon import PDESConfig
     from repro.core import distributed as D
 
     results = {}
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     for (delta, nv, mode, K) in [(5.0, 1, "exact", 8),
                                  (math.inf, 1, "exact", 8),
                                  (5.0, 10, "commavoid", 4),
@@ -36,8 +36,7 @@ SCRIPT = textwrap.dedent("""
         results[f"{mode}_{delta}_{nv}_{K}"] = {"tau": err_tau, "u": err_u}
 
     # multipod ensemble axes
-    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
     dist3 = D.DistConfig(ens_axes=("pod", "data"), ring_axis="model",
                          mode="exact", k_chunk=4)
     cfg3 = PDESConfig(L=16, n_v=2, delta=3.0)

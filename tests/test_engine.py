@@ -1,0 +1,142 @@
+"""PDESEngine: cross-backend parity and driver semantics.
+
+The engine's contract is that every backend consumes the same counter-based
+event stream and rebases on the same per-chunk schedule, so trajectories are
+*bit-identical* — asserted with array_equal, not allclose.  (The ``sharded``
+backend is covered separately in tests/test_distributed_pdes.py since it
+needs a multi-device subprocess.)
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PDESConfig, horizon
+from repro.core.engine import BACKENDS, EngineConfig, PDESEngine
+
+SINGLE = ("reference", "pallas", "pallas_multistep")
+
+
+@pytest.mark.parametrize("delta", [math.inf, 10.0])
+@pytest.mark.parametrize("rd_mode", [False, True])
+def test_cross_backend_parity(delta, rd_mode):
+    """reference == pallas == pallas_multistep: bit-identical tau + offset,
+    matching StepStats, from the shared event_bits stream."""
+    cfg = PDESConfig(L=128, n_v=4, delta=delta, rd_mode=rd_mode)
+    outs = {}
+    for backend in SINGLE:
+        eng = PDESEngine(cfg, backend=backend, k_fuse=16)
+        state = eng.init(8)
+        state, stats = eng.run(state, seed=5, n_steps=40)
+        outs[backend] = (state, stats)
+    ref_state, ref_stats = outs["reference"]
+    assert int(ref_state.step) == 40
+    for backend in SINGLE[1:]:
+        state, stats = outs[backend]
+        np.testing.assert_array_equal(np.asarray(state.tau),
+                                      np.asarray(ref_state.tau), err_msg=backend)
+        np.testing.assert_array_equal(np.asarray(state.offset),
+                                      np.asarray(ref_state.offset),
+                                      err_msg=backend)
+        for field in stats._fields:
+            np.testing.assert_allclose(
+                np.asarray(getattr(stats, field)),
+                np.asarray(getattr(ref_stats, field)),
+                rtol=1e-6, atol=1e-6, err_msg=f"{backend}.{field}")
+
+
+@pytest.mark.parametrize("backend", SINGLE)
+def test_remainder_chunks_and_resume(backend):
+    """n_steps not divisible by k_fuse, and run-in-two-pieces == run-once."""
+    cfg = PDESConfig(L=64, n_v=2, delta=8.0)
+    eng = PDESEngine(cfg, backend=backend, k_fuse=8)
+    a = eng.init(4)
+    a, _ = eng.run(a, 3, 11)
+    a, _ = eng.run(a, 3, 8)
+    b = eng.init(4)
+    b, _ = eng.run(b, 3, 19)
+    # same stream position; chunk boundaries differ -> rebase schedule
+    # differs, so compare absolute times with fp tolerance.
+    ta = np.asarray(a.tau) + np.asarray(a.offset)[:, None]
+    tb = np.asarray(b.tau) + np.asarray(b.offset)[:, None]
+    np.testing.assert_allclose(ta, tb, rtol=1e-6, atol=1e-5)
+    assert int(a.step) == int(b.step) == 19
+
+
+def test_run_mean_matches_run():
+    cfg = PDESConfig(L=64, n_v=3, delta=5.0)
+    eng = PDESEngine(cfg, backend="pallas_multistep", k_fuse=8)
+    st0 = eng.init(4)
+    _, per_step = eng.run(st0, 9, 24)
+    st_m, mean = eng.run_mean(st0, 9, 24)
+    for field in mean._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(mean, field)),
+            np.asarray(getattr(per_step, field)).mean(axis=0),
+            rtol=1e-5, atol=1e-5, err_msg=field)
+    assert int(st_m.step) == 24
+
+
+def test_burn_in_advances_state():
+    cfg = PDESConfig(L=32, n_v=1, delta=4.0)
+    eng = PDESEngine(cfg, backend="reference")
+    st = eng.burn_in(eng.init(4), 0, 50)
+    assert int(st.step) == 50
+    assert float(np.asarray(st.offset).min()) > 0  # GVT advanced
+
+
+def test_stale_window_is_conservative():
+    """Stale window ⊆ exact window: utilization can only drop, and the
+    engine's stale mode equals the distributed stale-reference oracle."""
+    from repro.core import distributed as D
+    cfg = PDESConfig(L=64, n_v=1, delta=4.0)
+    u = {}
+    for window in ("exact", "stale"):
+        eng = PDESEngine(cfg, backend="pallas" if window == "stale"
+                         else "reference", window=window, k_fuse=8)
+        st = eng.init(16)
+        st = eng.burn_in(st, 1, 96)
+        _, mean = eng.run_mean(st, 1, 200)
+        u[window] = float(np.asarray(mean.utilization).mean())
+    assert u["stale"] <= u["exact"] + 0.01
+    # engine stale == run_reference(stale_every=K) on the same stream
+    eng = PDESEngine(cfg, backend="reference", window="stale", k_fuse=8)
+    st, _ = eng.run(eng.init(6), 7, 24)
+    tau_ref, _ = D.run_reference(cfg, n_trials=6, n_steps=24, seed=7,
+                                 stale_every=8)
+    ours = np.asarray(st.tau) + np.asarray(st.offset)[:, None]
+    np.testing.assert_allclose(ours, np.asarray(tau_ref), rtol=1e-6,
+                               atol=1e-5)
+
+
+def test_engine_validation():
+    cfg = PDESConfig(L=16, n_v=1)
+    with pytest.raises(ValueError):
+        PDESEngine(cfg, backend="nope")
+    with pytest.raises(ValueError):
+        PDESEngine(cfg, backend="pallas_multistep", window="stale")
+    with pytest.raises(ValueError):
+        PDESEngine(cfg, backend="sharded")          # no mesh
+    with pytest.raises(ValueError):
+        EngineConfig(window="sorta")
+    eng = PDESEngine(cfg)
+    with pytest.raises(ValueError):
+        eng.run(eng.init(2), 0, 0)
+    assert set(BACKENDS) >= set(SINGLE)
+
+
+def test_engine_matches_horizon_semantics():
+    """The engine's reference backend is horizon._one_step on the counter
+    stream: per-step utilization starts at 1 (synchronized start) and the
+    Δ=0 limit serializes, exactly like the horizon tests."""
+    cfg = PDESConfig(L=16, n_v=1, delta=0.0)
+    eng = PDESEngine(cfg, backend="pallas_multistep", k_fuse=8)
+    st = eng.burn_in(eng.init(16), 2, 48)
+    _, mean = eng.run_mean(st, 2, 400)
+    u = float(np.asarray(mean.utilization).mean())
+    assert abs(u - 1.0 / 16) < 0.02, u
+    cfg2 = PDESConfig(L=32, n_v=1)
+    eng2 = PDESEngine(cfg2, backend="pallas")
+    _, stats = eng2.run(eng2.init(4), 0, 1)
+    np.testing.assert_allclose(np.asarray(stats.utilization), 1.0)

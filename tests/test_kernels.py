@@ -74,6 +74,22 @@ def test_pdes_multistep_matches_ref(L, n_v, delta, rd, B, K):
                                    rtol=1e-6)
 
 
+@pytest.mark.parametrize("L,n_v,delta,rd,B", SWEEP[:5])
+def test_pdes_multistep_counter_matches_ref(L, n_v, delta, rd, B):
+    """In-kernel event generation == host counter stream (bitwise)."""
+    cfg = PDESConfig(L=L, n_v=n_v, delta=delta, rd_mode=rd)
+    state, _ = _state_and_bits(cfg, B)
+    ctr = jnp.array([[3, 5, 0, 0]], dtype=jnp.uint32)
+    t1, s1 = ops.pdes_multistep_counter(state.tau, ctr, k_steps=6, n_v=n_v,
+                                        delta=delta, rd_mode=rd)
+    t2, s2 = ref.pdes_multistep_counter_ref(state.tau, ctr, k_steps=6,
+                                            n_v=n_v, delta=delta, rd_mode=rd)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    for k in s1:
+        np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(s2[k]),
+                                   rtol=1e-6)
+
+
 @pytest.mark.parametrize("block_b", [1, 2, 8])
 def test_block_size_invariance(block_b):
     """Tiling must not change results."""
@@ -81,6 +97,20 @@ def test_block_size_invariance(block_b):
     state, bits = _state_and_bits(cfg, 8)
     ta, _ = ops.step_ring(state.tau, bits, cfg, block_b=8)
     tb, _ = ops.step_ring(state.tau, bits, cfg, block_b=block_b)
+    np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 8])
+def test_counter_kernel_block_invariance(block_b):
+    """The counter kernel derives trial indices from program_id * block_b —
+    tiling must not shift the event stream."""
+    cfg = PDESConfig(L=64, n_v=2, delta=4.0)
+    state, _ = _state_and_bits(cfg, 8)
+    ctr = jnp.array([[11, 0, 4, 0]], dtype=jnp.uint32)   # nonzero b0 too
+    ta, _ = ops.pdes_multistep_counter(state.tau, ctr, k_steps=4, n_v=2,
+                                       delta=4.0, block_b=8)
+    tb, _ = ops.pdes_multistep_counter(state.tau, ctr, k_steps=4, n_v=2,
+                                       delta=4.0, block_b=block_b)
     np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
 
 

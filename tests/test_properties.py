@@ -1,11 +1,18 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+``hypothesis`` is an optional test dependency (pyproject ``[test]`` extra);
+on a bare interpreter this module must *skip*, never error at collection.
+"""
 import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (optional "
+                    "test dependency; pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import PDESConfig, horizon
 from repro.core.events import counter_bits_block
