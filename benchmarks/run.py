@@ -5,7 +5,21 @@ results/benchmarks/.  Ensemble sizes are scaled to a single-host CPU run
 (documented per entry); all qualitative paper claims (C1-C7, DESIGN.md §1)
 are asserted here and summarized in EXPERIMENTS.md.
 
+Every record carries machine metadata (jax version, device kind, Pallas
+interpret-mode flag) so baselines are only ever compared apples-to-apples.
+
 Run:  PYTHONPATH=src python -m benchmarks.run [--only fig2,eq8] [--fast]
+
+Regression-gate mode (CI): compare a fresh run against committed baselines::
+
+    python -m benchmarks.run --check results/benchmarks --tolerance 0.25
+
+re-runs every benchmark found in the baseline file/directory (intersected
+with ``--only``) and fails if a gate metric regresses beyond the tolerance.
+Benches that publish a hardware-portable ``gate`` ratio (e.g. the fused
+kernel's speedup over the reference scan) are gated on that ratio; the rest
+fall back to wall time, which is only compared when the machine metadata
+matches the baseline.
 """
 from __future__ import annotations
 
@@ -16,6 +30,7 @@ import os
 import pathlib
 import subprocess
 import sys
+import tempfile
 import textwrap
 import time
 
@@ -23,12 +38,57 @@ import numpy as np
 
 OUT = pathlib.Path("results/benchmarks")
 
+#: Every bench in this harness validates Pallas paths in interpret mode on
+#: CPU (the engine default); recorded in the metadata so a TPU baseline can
+#: never be gated against a CPU run.
+INTERPRET_MODE = True
 
-def _emit(name: str, us_per_call: float, derived: str, payload: dict):
+#: CLI workload knobs of the current invocation (set by ``main``), stamped
+#: into the metadata: a ``--fast`` or ``--backend``-narrowed run is a
+#: different workload and must never be gated against a full-run baseline.
+_RUN_CONFIG = {"fast": False, "cli_backend": None}
+
+
+def machine_meta() -> dict:
+    """Machine/runtime + workload metadata stamped into every result JSON.
+
+    ``--check`` uses this to keep baseline comparisons apples-to-apples:
+    gates are skipped when platform / device kind / interpret mode / CLI
+    workload knobs differ from the baseline's.
+    """
+    import platform
+
+    import jax
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "platform": dev.platform,
+        "device_kind": dev.device_kind,
+        "interpret_mode": INTERPRET_MODE,
+        # host identity: "cpu/cpu" is the same on every x86 box, so wall-time
+        # gates additionally require the same hostname/core count — i.e. they
+        # only ever fire on the machine that recorded the baseline.
+        "hostname": platform.node(),
+        "cpu_count": os.cpu_count(),
+        "python_version": platform.python_version(),
+        **_RUN_CONFIG,
+    }
+
+
+def _emit(name: str, us_per_call: float, derived: str, payload: dict,
+          gate: dict | None = None):
+    """Print the CSV line and write the JSON record.
+
+    ``gate`` optionally names a hardware-portable regression-gate metric,
+    e.g. ``{"metric": "speedup", "value": 2.2, "higher_is_better": True}``;
+    ``--check`` prefers it over raw wall time.
+    """
     print(f"{name},{us_per_call:.1f},{derived}")
     OUT.mkdir(parents=True, exist_ok=True)
     payload = dict(payload, name=name, us_per_call=us_per_call,
-                   derived=derived)
+                   derived=derived, meta=machine_meta())
+    if gate is not None:
+        payload["gate"] = gate
     (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1))
 
 
@@ -363,7 +423,57 @@ def bench_kernel_fused(fast=False, backend=None):
           f"{us_per_step['reference']:.0f}"
           + (f" (multistep x{speedup:.2f})" if speedup is not None else "")
           + f"; bytes/PE/step {xla_bytes}->{fused_bytes}->{kfused_bytes:.1f}",
-          rec)
+          rec,
+          gate=None if speedup is None else {
+              "metric": "speedup_multistep_vs_reference", "value": speedup,
+              "higher_is_better": True})
+
+
+# ---------------------------------------------------------------------------
+# Window-sweep table — batched Δ-axis vs serial per-Δ engine loop
+# ---------------------------------------------------------------------------
+
+
+def bench_window_sweep(fast=False, backend=None):
+    """Batched window sweep vs the serial per-Δ loop on identical physics.
+
+    The batched path advances all ``n_windows x replicas`` trajectories in
+    one engine pass per grid point (Δ as a per-row operand down to the
+    kernel); the serial oracle makes one engine call per Δ on the same
+    counter-stream rows, so both produce bit-identical records
+    (asserted).  The gate metric is the batched-over-serial speedup — a
+    hardware-portable ratio.
+    """
+    from repro.experiments import (WindowSweep, run_window_sweep,
+                                   serial_window_sweep)
+    spec = WindowSweep(
+        Ls=(128 if fast else 256,), n_vs=(10,),
+        deltas=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, math.inf),
+        replicas=8, n_steps=128, burn_in=96,
+        backend=backend or "pallas_multistep", seed=3)
+    res = run_window_sweep(spec)       # compile both paths before timing
+    ser = serial_window_sweep(spec)
+    assert res.records == ser.records  # bit-identical, not just statistical
+    t_batched = min(_timed(run_window_sweep, spec)[1] for _ in range(3))
+    t_serial = min(_timed(serial_window_sweep, spec)[1] for _ in range(3))
+    speedup = t_serial / t_batched
+    rec = {"spec": {"L": spec.Ls[0], "n_v": 10, "n_windows": spec.n_windows,
+                    "replicas": spec.replicas, "n_steps": spec.n_steps,
+                    "burn_in": spec.burn_in, "backend": spec.backend},
+           "us_batched": t_batched, "us_serial": t_serial,
+           "speedup_batched_vs_serial": speedup,
+           "u_by_delta": {str(r.delta): r.u for r in res.records}}
+    # the bench itself only insists the batched pass is measurably faster;
+    # regression *depth* is governed by the --check gate and its --tolerance,
+    # not a hard-coded floor here (the ratio baseline is ~2x).
+    assert speedup >= 1.05, rec
+    _emit("bench_window_sweep", t_batched,
+          f"batched {t_batched / 1e3:.0f}ms vs serial {t_serial / 1e3:.0f}ms "
+          f"(x{speedup:.2f}) over {spec.n_windows} windows x "
+          f"{spec.replicas} replicas, {spec.backend}",
+          rec,
+          gate={"metric": "speedup_batched_vs_serial", "value": speedup,
+                "higher_is_better": True})
 
 
 # ---------------------------------------------------------------------------
@@ -444,7 +554,111 @@ BENCHES = {
     "kernel": bench_kernel_fused,
     "kernel_fused": bench_kernel_fused,
     "pdes_comm": bench_pdes_comm,
+    "window_sweep": bench_window_sweep,
 }
+
+# ---------------------------------------------------------------------------
+# --check: regression gate against committed baselines
+# ---------------------------------------------------------------------------
+
+
+def record_to_bench(record_name: str) -> str | None:
+    """BENCHES key for an ``_emit`` record name, by naming convention.
+
+    ``bench_<key>`` records come from the perf-table benches; the figure
+    benches are named ``<key>_<description>`` (e.g. ``fig2_utilization_...``).
+    Derived rather than hand-mapped so a future bench can never be silently
+    dropped from gating by a stale lookup table.
+    """
+    if record_name.startswith("bench_") and record_name[6:] in BENCHES:
+        return record_name[6:]
+    head = record_name.split("_", 1)[0]
+    return head if head in BENCHES else None
+
+
+def load_baselines(path: str) -> dict:
+    """Baseline records keyed by BENCHES name, from a JSON file or directory."""
+    p = pathlib.Path(path)
+    files = sorted(p.glob("*.json")) if p.is_dir() else [p]
+    out = {}
+    for f in files:
+        try:
+            rec = json.loads(f.read_text())
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"check: skipping unreadable baseline {f}: {e}")
+            continue
+        key = record_to_bench(rec.get("name", "")) if isinstance(rec, dict) \
+            else None
+        if key is not None:
+            out[key] = rec
+    return out
+
+
+_META_GATE_KEYS = ("platform", "device_kind", "interpret_mode", "hostname",
+                   "cpu_count")
+
+
+def compare_to_baseline(name: str, baseline: dict, tolerance: float) -> str:
+    """One gate decision: "ok", "regressed", or "skipped".
+
+    Prefers the hardware-portable ``gate`` ratio when the baseline and the
+    fresh record both carry one with the same metric name.  Otherwise falls
+    back to wall time — but only when the machine metadata matches the
+    baseline (``_META_GATE_KEYS``), because wall time on different hardware
+    classes is not a regression signal.
+    """
+    fresh = json.loads((OUT / f"{baseline['name']}.json").read_text())
+    # workload knobs first: a --fast or --backend-narrowed run measures a
+    # different workload, so neither the gate ratio nor wall time compares.
+    b_cfg = {k: (baseline.get("meta") or {}).get(k)
+             for k in ("fast", "cli_backend")}
+    f_cfg = {k: (fresh.get("meta") or {}).get(k)
+             for k in ("fast", "cli_backend")}
+    if b_cfg != f_cfg:
+        print(f"check: {name} skipped — run workload differs from baseline "
+              f"({b_cfg} vs {f_cfg})")
+        return "skipped"
+    b_gate, f_gate = baseline.get("gate"), fresh.get("gate")
+    if bool(b_gate) != bool(f_gate):
+        # one side measured its gate ratio and the other didn't (e.g. a
+        # --backend narrowing skipped the multistep timing): the wall-time
+        # fallback would compare different workloads, so don't gate at all.
+        print(f"check: {name} skipped — gate metric present on only one "
+              f"side (baseline: {bool(b_gate)}, fresh: {bool(f_gate)}); "
+              f"run configurations differ")
+        return "skipped"
+    if b_gate and f_gate and b_gate["metric"] == f_gate["metric"]:
+        old, new = float(b_gate["value"]), float(f_gate["value"])
+        if b_gate.get("higher_is_better", True):
+            ok, floor = new >= old * (1.0 - tolerance), old * (1.0 - tolerance)
+            print(f"check: {name} {b_gate['metric']} {old:.3f} -> {new:.3f} "
+                  f"(floor {floor:.3f}) {'ok' if ok else 'REGRESSED'}")
+        else:
+            ok, ceil = new <= old * (1.0 + tolerance), old * (1.0 + tolerance)
+            print(f"check: {name} {b_gate['metric']} {old:.3f} -> {new:.3f} "
+                  f"(ceiling {ceil:.3f}) {'ok' if ok else 'REGRESSED'}")
+        return "ok" if ok else "regressed"
+    if b_gate and f_gate:                # both gated, different metrics
+        print(f"check: {name} skipped — gate metrics differ "
+              f"({b_gate['metric']} vs {f_gate['metric']})")
+        return "skipped"
+    b_meta, f_meta = baseline.get("meta"), fresh.get("meta")
+    if not b_meta or any(b_meta.get(k) != f_meta.get(k)
+                         for k in _META_GATE_KEYS):
+        print(f"check: {name} skipped — no portable gate metric and machine "
+              f"metadata differs from baseline "
+              f"({b_meta and {k: b_meta.get(k) for k in _META_GATE_KEYS}} "
+              f"vs {({k: f_meta.get(k) for k in _META_GATE_KEYS})})")
+        return "skipped"
+    if b_meta.get("jax_version") != f_meta.get("jax_version"):
+        print(f"check: {name} note — jax {b_meta.get('jax_version')} -> "
+              f"{f_meta.get('jax_version')}")
+    old, new = float(baseline["us_per_call"]), float(fresh["us_per_call"])
+    ok = new <= old * (1.0 + tolerance)
+    print(f"check: {name} us_per_call {old:.1f} -> {new:.1f} "
+          f"(ceiling {old * (1 + tolerance):.1f}) "
+          f"{'ok' if ok else 'REGRESSED'}")
+    return "ok" if ok else "regressed"
 
 
 def main(argv=None) -> None:
@@ -455,13 +669,52 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", default=None,
                     choices=["reference", "pallas", "pallas_multistep"],
                     help="route engine-aware benches (kernel_fused, "
-                         "pdes_comm) through this PDESEngine backend")
+                         "pdes_comm, window_sweep) through this PDESEngine "
+                         "backend")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="baseline JSON file or directory (e.g. "
+                         "results/benchmarks); re-run the benchmarks found "
+                         "there and fail on perf regressions beyond "
+                         "--tolerance")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative regression of the gate metric "
+                         "(default 0.25)")
     args = ap.parse_args(argv)
-    names = args.only.split(",") if args.only else list(BENCHES)
-    if args.only is None:
-        names.remove("kernel")        # alias of kernel_fused; run once
+    _RUN_CONFIG.update(fast=args.fast, cli_backend=args.backend)
+    baselines = None
+    if args.check is not None:
+        baselines = load_baselines(args.check)
+        if not baselines:
+            raise SystemExit(f"--check: no readable baselines in "
+                             f"{args.check}")
+        # every --only name still RUNS (its claim asserts execute); only the
+        # gate comparison needs a baseline.  Gating nothing is an error, not
+        # a green job.
+        names = args.only.split(",") if args.only else list(baselines)
+        unknown = sorted(set(names) - set(BENCHES))
+        if unknown:
+            raise SystemExit(f"--check: unknown benchmark(s) {unknown}; "
+                             f"known: {sorted(set(BENCHES))}")
+        # normalize aliases that share one record/baseline (kernel -> _fused)
+        names = list(dict.fromkeys(
+            "kernel_fused" if n == "kernel" else n for n in names))
+        missing = sorted(set(names) - set(baselines))
+        if missing:
+            print(f"check: no baseline for {missing}; run but not gated")
+        if not set(names) & set(baselines):
+            raise SystemExit("--check: none of the requested benchmarks "
+                             "have a baseline — nothing would be gated")
+        # fresh records go to a scratch dir so the committed baselines on
+        # disk are never overwritten by the very run that gates against them
+        global OUT
+        OUT = pathlib.Path(tempfile.mkdtemp(prefix="bench-fresh-"))
+        print(f"check: fresh records -> {OUT}")
+    else:
+        names = args.only.split(",") if args.only else list(BENCHES)
+        if args.only is None:
+            names.remove("kernel")    # alias of kernel_fused; run once
     print("name,us_per_call,derived")
-    failures = []
+    failures, regressions, gated = [], [], 0
     for n in names:
         fn = BENCHES[n]
         kw = {"fast": args.fast}
@@ -472,9 +725,24 @@ def main(argv=None) -> None:
         except AssertionError as e:  # report, keep going
             failures.append((n, str(e)[:200]))
             print(f"{n},0,FAILED: {str(e)[:120]}")
+            continue
+        if baselines is not None and n in baselines:
+            verdict = compare_to_baseline(n, baselines[n], args.tolerance)
+            if verdict == "regressed":
+                regressions.append(n)
+            if verdict != "skipped":
+                gated += 1
     if failures:
         raise SystemExit(f"{len(failures)} benchmark claims failed: "
                          f"{[f[0] for f in failures]}")
+    if regressions:
+        raise SystemExit(f"perf regression beyond tolerance "
+                         f"{args.tolerance} in: {regressions}")
+    if baselines is not None and not gated:
+        # every comparison was skipped (workload/machine mismatch): a green
+        # exit would claim a gate that never ran.
+        raise SystemExit("--check: every baseline comparison was skipped — "
+                         "nothing was gated (workload or machine mismatch)")
 
 
 if __name__ == "__main__":

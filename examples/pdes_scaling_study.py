@@ -15,7 +15,6 @@ import argparse
 import json
 import pathlib
 
-import numpy as np
 
 from repro.core import PDESConfig, ensemble, scaling, theory
 

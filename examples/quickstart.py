@@ -8,7 +8,6 @@ claims side by side:
 
 Usage: PYTHONPATH=src python examples/quickstart.py
 """
-import math
 
 from repro.core import PDESConfig, ensemble, theory
 

@@ -42,6 +42,14 @@ after every chunk), Kahan-compensated offset, step counter.  All backends
 rebase once per chunk on the identical schedule, which is what makes the
 trajectories comparable bit-for-bit.
 
+**Window sweeps** (``init_sweep`` + the ``deltas=`` kwarg): the Δ grid of a
+window sweep is laid out on the ensemble axis — ``B = n_windows * replicas``
+rows with a per-row Δ column fed to the backends as a *batched operand*
+(array window rule in the reference scan, window base folding in the
+one-step kernel, a ``(B, 1)`` VMEM column in the multistep kernel).  One
+device pass advances every (Δ, replica) trajectory; ``repro.experiments``
+builds the paper's full (L, N_V, Δ) studies on top of this entry point.
+
 Example::
 
     from repro.core import PDESConfig
@@ -116,23 +124,28 @@ def _auto_block_b(B: int, L: int, block_b: int | None,
 def _make_advance(cfg: PDESConfig, ecfg: EngineConfig, B: int, L: int):
     """Backend-specific K-step chunk advance.
 
-    Returns ``advance(tau, step0, seed, k)`` -> ``(tau_k, moments (k, B))``
-    with ``k`` static.  No rebasing inside — the shared driver owns that.
+    Returns ``advance(tau, step0, seed, k, delta_col, b0)`` ->
+    ``(tau_k, moments (k, B))`` with ``k`` static.  ``delta_col`` is either
+    None (static ``cfg.delta`` window) or a traced ``(B, 1)`` column of
+    per-row window widths — the batched window-sweep operand; ``b0`` is the
+    global trial index of row 0 in the counter event stream.  No rebasing
+    inside — the shared driver owns that.
     """
     stale = ecfg.window == "stale"
 
     if ecfg.backend == "reference":
 
-        def advance(tau, step0, seed, k):
+        def advance(tau, step0, seed, k, delta_col, b0):
             gvt0 = jnp.min(tau, axis=-1, keepdims=True)
 
             def one(tau, s):
                 bits = counter_bits_block(
-                    seed, s, jnp.int32(0), jnp.int32(0), B, L)
+                    seed, s, b0, jnp.int32(0), B, L)
                 is_l, is_r, eta = horizon.decode_events(bits, cfg)
                 tau, update, _ = horizon.step_core(
                     tau, is_l, is_r, eta, cfg,
-                    gvt_for_window=gvt0 if stale else None)
+                    gvt_for_window=gvt0 if stale else None,
+                    delta_override=delta_col)
                 return tau, horizon.ring_moments(tau, update)
 
             return lax.scan(one, tau, step0 + jnp.arange(k, dtype=jnp.int32))
@@ -142,16 +155,24 @@ def _make_advance(cfg: PDESConfig, ecfg: EngineConfig, B: int, L: int):
         from ..kernels.pdes_step import pdes_step
         bb = _auto_block_b(B, L, ecfg.block_b)
 
-        def advance(tau, step0, seed, k):
+        def advance(tau, step0, seed, k, delta_col, b0):
             gvt0 = jnp.min(tau, axis=-1, keepdims=True)
 
             def one(tau, s):
                 bits = counter_bits_block(
-                    seed, s, jnp.int32(0), jnp.int32(0), B, L)
+                    seed, s, b0, jnp.int32(0), B, L)
                 gvt = gvt0 if stale else jnp.min(tau, axis=-1, keepdims=True)
+                # per-row Δ folds into the window base: the kernel's rule is
+                # ``tau <= delta + gvt``, so passing ``gvt + delta_col`` with
+                # a static delta of 0 applies each row's own window — same
+                # fp32 add, bit-identical to the static-delta path.
+                if delta_col is None:
+                    gvt_eff, d = gvt, cfg.delta
+                else:
+                    gvt_eff, d = gvt + delta_col, 0.0
                 return pdes_step(
-                    ring_halo(tau), bits, gvt,
-                    n_v=cfg.n_v, delta=cfg.delta, rd_mode=cfg.rd_mode,
+                    ring_halo(tau), bits, gvt_eff,
+                    n_v=cfg.n_v, delta=d, rd_mode=cfg.rd_mode,
                     border_both=cfg.border_both, block_b=bb,
                     interpret=ecfg.interpret)
 
@@ -161,12 +182,12 @@ def _make_advance(cfg: PDESConfig, ecfg: EngineConfig, B: int, L: int):
         from ..kernels.pdes_multistep import pdes_multistep_counter
         bb = _auto_block_b(B, L, ecfg.block_b, in_kernel_bits=True)
 
-        def advance(tau, step0, seed, k):
+        def advance(tau, step0, seed, k, delta_col, b0):
             ctr = jnp.stack([
                 seed.astype(jnp.uint32), step0.astype(jnp.uint32),
-                jnp.uint32(0), jnp.uint32(0)])[None, :]
+                b0.astype(jnp.uint32), jnp.uint32(0)])[None, :]
             return pdes_multistep_counter(
-                tau, ctr, k_steps=k,
+                tau, ctr, delta_col, k_steps=k,
                 n_v=cfg.n_v, delta=cfg.delta, rd_mode=cfg.rd_mode,
                 border_both=cfg.border_both, block_b=bb,
                 interpret=ecfg.interpret)
@@ -179,22 +200,26 @@ def _make_advance(cfg: PDESConfig, ecfg: EngineConfig, B: int, L: int):
 
 @functools.partial(jax.jit, static_argnames=("cfg", "ecfg", "n_steps", "mode"))
 def _run_single(state: SimState, seed, cfg: PDESConfig, ecfg: EngineConfig,
-                n_steps: int, mode: str):
+                n_steps: int, mode: str, deltas=None, trial_base=0):
     """Shared chunked driver for the single-device backends.
 
     mode: "record" -> StepStats with leading (n_steps,) axis;
           "mean"   -> time-averaged StepStats (O(1) memory in n_steps);
           "burn"   -> state only (stats math dead-code-eliminated).
+    deltas: optional (B,) per-row window widths (sweep mode, see ``run``).
+    trial_base: global trial index of row 0 in the counter event stream.
     """
     B, L = state.tau.shape
     K = max(1, min(ecfg.k_fuse, n_steps))
     n_chunks, rem = divmod(n_steps, K)
     advance = _make_advance(cfg, ecfg, B, L)
     dtype = state.tau.dtype
+    delta_col = None if deltas is None else deltas.astype(dtype)[:, None]
+    b0 = jnp.asarray(trial_base, jnp.int32)
 
     def chunk(carry, k):
         tau, off, comp, step0 = carry
-        tau, moments = advance(tau, step0, seed, k)
+        tau, moments = advance(tau, step0, seed, k, delta_col, b0)
         stats = horizon.stats_from_moments(moments, off[None, :], L)
         # rebase once per chunk: identical schedule on every backend, so
         # trajectories stay bitwise comparable (fp32 hygiene per SimState).
@@ -285,27 +310,71 @@ class PDESEngine:
         """Fully synchronized initial condition (all clocks equal)."""
         return horizon.init_state(self.cfg, n_trials)
 
+    def init_sweep(self, deltas, replicas: int):
+        """Per-Δ window state for a batched window sweep.
+
+        Lays the Δ grid out on the ensemble axis: ``B = n_windows * replicas``
+        rows, window ``w`` owning rows ``[w*replicas, (w+1)*replicas)`` —
+        exactly the flattened form of vmapping the window state over the Δ
+        axis on top of the replica batch.  Rows with ``inf`` run
+        unconstrained.  Pass the returned ``deltas`` row array to ``run`` /
+        ``run_mean`` / ``burn_in``; one device pass then advances all
+        ``n_windows x replicas`` trajectories.
+
+        Returns:
+          (state, deltas_rows) with ``deltas_rows`` of shape ``(B,)``.
+        """
+        d = jnp.repeat(jnp.asarray(deltas, self.cfg.dtype), replicas)
+        return self.init(int(d.shape[0])), d
+
     # -- drivers ----------------------------------------------------------
 
-    def run(self, state: SimState, seed, n_steps: int):
-        """Advance ``n_steps``, recording StepStats per step (n_steps, B)."""
-        return self._dispatch(state, seed, n_steps, "record")
+    def run(self, state: SimState, seed, n_steps: int, *,
+            deltas=None, trial_base=0):
+        """Advance ``n_steps``, recording StepStats per step (n_steps, B).
 
-    def run_mean(self, state: SimState, seed, n_steps: int):
+        Args:
+          deltas: optional (B,) per-row window widths — the sweep mode
+            (see ``init_sweep``); overrides ``cfg.delta`` row-wise.
+          trial_base: global trial index of row 0 in the counter event
+            stream.  A serial per-Δ loop that runs window ``w`` with
+            ``trial_base=w*replicas`` consumes exactly the stream slice the
+            batched sweep assigns to those rows, so the two are comparable
+            bit-for-bit (tests/test_experiments.py).
+        """
+        return self._dispatch(state, seed, n_steps, "record",
+                              deltas=deltas, trial_base=trial_base)
+
+    def run_mean(self, state: SimState, seed, n_steps: int, *,
+                 deltas=None, trial_base=0):
         """Advance ``n_steps``; return only time-averaged StepStats (B,)."""
-        return self._dispatch(state, seed, n_steps, "mean")
+        return self._dispatch(state, seed, n_steps, "mean",
+                              deltas=deltas, trial_base=trial_base)
 
-    def burn_in(self, state: SimState, seed, n_steps: int) -> SimState:
+    def burn_in(self, state: SimState, seed, n_steps: int, *,
+                deltas=None, trial_base=0) -> SimState:
         """Advance without recording (reach the steady state)."""
-        return self._dispatch(state, seed, n_steps, "burn")[0]
+        return self._dispatch(state, seed, n_steps, "burn",
+                              deltas=deltas, trial_base=trial_base)[0]
 
-    def _dispatch(self, state, seed, n_steps, mode):
+    def _dispatch(self, state, seed, n_steps, mode, deltas=None, trial_base=0):
         if n_steps < 1:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
         seed = jnp.uint32(seed)
         if self.ecfg.backend == "sharded":
+            if deltas is not None or trial_base:
+                raise NotImplementedError(
+                    "window sweeps are single-device for now; multi-device "
+                    "sweep sharding is a ROADMAP open item")
             return self._run_sharded(state, seed, n_steps, mode)
-        return _run_single(state, seed, self.cfg, self.ecfg, n_steps, mode)
+        if deltas is not None:
+            deltas = jnp.asarray(deltas, state.tau.dtype)
+            if deltas.shape != (state.tau.shape[0],):
+                raise ValueError(
+                    f"deltas must have shape ({state.tau.shape[0]},) — one "
+                    f"window width per ensemble row — got {deltas.shape}")
+        return _run_single(state, seed, self.cfg, self.ecfg, n_steps, mode,
+                           deltas, trial_base)
 
     def _run_sharded(self, state, seed, n_steps, mode):
         from . import distributed as D

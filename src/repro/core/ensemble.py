@@ -100,6 +100,71 @@ def steady_state(
     )
 
 
+def steady_state_sweep(
+    cfg: PDESConfig,
+    deltas: Sequence[float],
+    *,
+    n_trials: int = 64,
+    seed: int = 0,
+    burn_in_steps: int | None = None,
+    measure_steps: int | None = None,
+    backend: str = "reference",
+    engine_opts: dict | None = None,
+) -> list[SteadyState]:
+    """Per-Δ steady states from ONE batched engine pass (window-sweep path).
+
+    Thin ``SteadyState`` adapter over ``repro.experiments``: the Δ axis
+    rides on the ensemble axis, so all ``len(deltas) * n_trials``
+    trajectories advance together instead of looping ``steady_state`` per
+    Δ.  ``cfg.delta`` is ignored; each returned ``SteadyState`` carries its
+    own ``cfg`` with the row's Δ.  The whole recorded measurement span is
+    averaged (``steady_frac=1.0``), matching the ``steady_state``
+    convention; ``rate`` is the least-squares GVT slope of
+    ``measurement.progress_rate`` rather than the endpoint quotient.
+
+    ``engine_opts`` accepts the engine options a batched sweep supports —
+    ``window`` and ``k_fuse``.  ``steady_state``'s other engine options
+    (``mesh``/``dist``: sweeps are single-device for now, see ROADMAP;
+    ``block_b``/``interpret``: not spec-level) are rejected explicitly
+    rather than silently dropped.
+    """
+    from ..experiments.sweep import WindowSweep, run_window_sweep
+    if burn_in_steps is None:
+        burn_in_steps = max(
+            default_burn_in(dataclasses.replace(cfg, delta=float(d)))
+            for d in deltas)
+    if measure_steps is None:
+        measure_steps = max(200, burn_in_steps // 4)
+    opts = dict(engine_opts or {})
+    unsupported = sorted(set(opts) - {"window", "k_fuse"})
+    if unsupported:
+        raise ValueError(
+            f"steady_state_sweep supports engine_opts 'window' and 'k_fuse' "
+            f"only (batched sweeps are single-device); got {unsupported}")
+    spec = WindowSweep(
+        Ls=(cfg.L,), n_vs=(cfg.n_v,), deltas=tuple(float(d) for d in deltas),
+        replicas=n_trials, n_steps=measure_steps, burn_in=burn_in_steps,
+        backend=backend, rd_mode=cfg.rd_mode,
+        border_both=cfg.border_both, steady_frac=1.0, seed=seed, **opts)
+    result = run_window_sweep(spec)
+    out = []
+    for d in deltas:
+        (rec,) = result.select(delta=float(d))
+        out.append(SteadyState(
+            cfg=dataclasses.replace(cfg, delta=float(d)),
+            n_trials=n_trials,
+            burn_in_steps=burn_in_steps,
+            measure_steps=measure_steps,
+            utilization=rec.u,
+            utilization_err=rec.u_err,
+            w=rec.w,
+            w2=rec.w2,
+            wa=rec.wa,
+            rate=rec.rate,
+        ))
+    return out
+
+
 def utilization_vs_L(
     Ls: Sequence[int],
     *,

@@ -150,7 +150,7 @@ def conservative_update(
     eta: jax.Array,
     gvt: jax.Array,
     *,
-    delta: float,
+    delta: float | jax.Array,
     rd_mode: bool = False,
     border_both: bool = False,
 ):
@@ -160,6 +160,13 @@ def conservative_update(
     them (rolls on a full ring, halo columns on a shard, VMEM-resident rolls
     inside a kernel).  ``gvt`` is the window base — exact current minimum or
     a stale/conservative bound — and is ignored when ``delta`` is inf.
+
+    ``delta`` may be a static Python float (the single-window case; inf
+    short-circuits the window rule) or a *traced array* broadcastable
+    against ``tau`` — e.g. a ``(B, 1)`` per-trajectory column for batched
+    window sweeps, where each ensemble row carries its own Δ.  Array rows
+    holding ``inf`` recover the unconstrained rule bit-for-bit, since
+    ``tau <= inf + gvt`` is identically True for finite ``gvt``.
 
     Returns ``(tau_next, update)``.  Pure jnp — shared by the reference
     scan (``step_core``), the Pallas kernel bodies, and the sharded runtime.
@@ -174,7 +181,7 @@ def conservative_update(
         ok_left = jnp.where(is_left, tau <= left, True)
         ok_right = jnp.where(is_right, tau <= right, True)
         causal_ok = ok_left & ok_right
-    if math.isinf(delta):
+    if isinstance(delta, (int, float)) and math.isinf(delta):
         window_ok = jnp.ones(tau.shape, dtype=bool)
     else:
         window_ok = tau <= delta + gvt
@@ -195,6 +202,7 @@ def step_core(
     cfg: PDESConfig,
     *,
     gvt_for_window: jax.Array | None = None,
+    delta_override: jax.Array | None = None,
 ):
     """One conservative update attempt on every PE of every trial.
 
@@ -207,6 +215,9 @@ def step_core(
         window rule instead of the exact current minimum.  Because GVT is
         non-decreasing, a stale value yields a stricter window and the scheme
         stays conservative (DESIGN.md B3).
+      delta_override: optional (B, 1) per-trajectory window widths replacing
+        the static ``cfg.delta`` — the batched window-sweep path, where the
+        Δ axis rides on the ensemble axis (``inf`` rows = unconstrained).
 
     Returns:
       (tau_next, update_mask, gvt) with gvt the exact current minimum
@@ -216,9 +227,10 @@ def step_core(
     right_nbr = jnp.roll(tau, -1, axis=-1)  # tau_{k+1}
     gvt = jnp.min(tau, axis=-1, keepdims=True)  # (B, 1) exact global minimum
     base = gvt if gvt_for_window is None else gvt_for_window
+    delta = cfg.delta if delta_override is None else delta_override
     tau_next, update = conservative_update(
         tau, left_nbr, right_nbr, is_left, is_right, eta, base,
-        delta=cfg.delta, rd_mode=cfg.rd_mode, border_both=cfg.border_both)
+        delta=delta, rd_mode=cfg.rd_mode, border_both=cfg.border_both)
     return tau_next, update, gvt[..., 0]
 
 

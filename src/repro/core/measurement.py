@@ -10,6 +10,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class GroupStats(NamedTuple):
@@ -106,3 +107,69 @@ def progress_rate(gvt_series: jax.Array, t0: int = 0) -> jax.Array:
     cov = jnp.mean((t[:, None] - t_mean) * (g - g_mean), axis=0)
     var = jnp.mean((t - t_mean) ** 2)
     return cov / var
+
+
+# ---------------------------------------------------------------------------
+# steady-state windowing + per-Δ sweep reduction
+# ---------------------------------------------------------------------------
+
+
+def steady_start(n_steps: int, steady_frac: float = 0.5) -> int:
+    """First step of the steady-state measurement window.
+
+    The last ``steady_frac`` of a recorded series is treated as steady state
+    (the leading part is the transient); at least one step is always kept.
+    """
+    if not 0.0 < steady_frac <= 1.0:
+        raise ValueError(f"steady_frac must be in (0, 1], got {steady_frac}")
+    return min(n_steps - 1, int(round(n_steps * (1.0 - steady_frac))))
+
+
+def sweep_reduce(stats, n_windows: int, replicas: int, *,
+                 steady_frac: float = 0.5) -> dict:
+    """Reduce batched window-sweep StepStats to per-Δ steady-state estimates.
+
+    The sweep lays the Δ grid on the ensemble axis (``PDESEngine.init_sweep``):
+    each per-step array in ``stats`` has shape ``(T, n_windows * replicas)``
+    with window ``w`` owning the row block ``[w*replicas, (w+1)*replicas)``.
+    This reduces time over the steady-state window (``steady_start``) and
+    then the replica axis, per window.
+
+    Returns a dict of ``(n_windows,)`` numpy arrays:
+      ``u``/``u_err``       steady-state utilization (mean, standard error),
+      ``w2``/``w2_err``     surface variance ⟨w²⟩, Eq. (4),
+      ``w``                 width ⟨w⟩ = ⟨sqrt(w²)⟩,
+      ``wa``                absolute width, Eq. (5),
+      ``spread``            ⟨max τ - min τ⟩ — the horizon extent the window
+                            bounds (≤ Δ + max increment, Sec. V),
+      ``rate``/``rate_err`` GVT progress rate per parallel step.
+    """
+    u = np.asarray(stats.utilization)
+    T = u.shape[0]
+    if u.shape[1] != n_windows * replicas:
+        raise ValueError(f"stats rows {u.shape[1]} != n_windows*replicas "
+                         f"({n_windows}*{replicas})")
+    t0 = steady_start(T, steady_frac)
+
+    def per_window(x):                       # (T, B) -> (n_windows, replicas)
+        return np.asarray(x)[t0:].mean(axis=0).reshape(n_windows, replicas)
+
+    def mean_err(x):
+        m = x.mean(axis=1)
+        e = (x.std(axis=1, ddof=1) / np.sqrt(replicas) if replicas > 1
+             else np.zeros_like(m))
+        return m, e
+
+    u_w, u_e = mean_err(per_window(stats.utilization))
+    w2_w, w2_e = mean_err(per_window(stats.w2))
+    rate = np.asarray(progress_rate(jnp.asarray(stats.gvt), t0=t0))
+    r_w, r_e = mean_err(rate.reshape(n_windows, replicas))
+    spread = per_window(np.asarray(stats.max_dev) + np.asarray(stats.min_dev))
+    return {
+        "u": u_w, "u_err": u_e,
+        "w2": w2_w, "w2_err": w2_e,
+        "w": np.sqrt(per_window(stats.w2)).mean(axis=1),
+        "wa": mean_err(per_window(stats.wa))[0],
+        "spread": spread.mean(axis=1),
+        "rate": r_w, "rate_err": r_e,
+    }

@@ -6,7 +6,6 @@ the capacity-planning formulas exposed by the framework (DESIGN.md §3.2).
 """
 from __future__ import annotations
 
-import math
 
 import numpy as np
 

@@ -24,7 +24,6 @@ spread ~ Exp(1): pick Δ to trade progress-rate bound against memory bound.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 

@@ -18,7 +18,6 @@ import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.tree_util import keystr
 

@@ -1,0 +1,22 @@
+"""Experiment layer: the paper's systematic studies, run in batched form.
+
+``sweep`` executes a ``WindowSweep`` spec — grids over (L, N_V volume load,
+window Δ including Δ=inf, backend, replicas) — by laying the Δ axis on the
+engine's ensemble batch (``PDESEngine.init_sweep``), so one device pass
+covers ``replicas x n_windows`` trajectories per (L, N_V) grid point.
+``optimal_window`` finds the Δ* that maximizes efficiency (utilization per
+unit width-bounded cost), the paper's tuning-parameter claim.
+"""
+from .optimal_window import (  # noqa: F401
+    OptimalWindow,
+    efficiency,
+    find_optimal_window,
+    optimal_windows,
+)
+from .sweep import (  # noqa: F401
+    SweepRecord,
+    SweepResult,
+    WindowSweep,
+    run_window_sweep,
+    serial_window_sweep,
+)

@@ -1,0 +1,92 @@
+"""Optimal window width Δ*: the paper's tuning-parameter claim, quantified.
+
+The paper's closing argument (Sec. V): the window width Δ is a *tuning
+parameter* — "for a given volume load per processor, [it] could be adjusted
+to optimize the utilization so as to maximize the efficiency".  The two
+sides of the trade-off, both measured by a window sweep:
+
+* utilization u(Δ) rises monotonically with Δ (more PEs clear the window
+  rule per step) and saturates at the unconstrained value;
+* the horizon width w(Δ) also rises with Δ — and the width *is* the cost of
+  the measurement phase: every PE must hold its state history across the
+  horizon extent for state saving / data collection, so memory and
+  measurement latency grow with w (that is the phase that fails to scale
+  without the window).
+
+We therefore score a window by utilization per unit width-bounded cost::
+
+    efficiency(Δ) = u(Δ) / (1 + w(Δ))
+
+(the 1 is the O(1) per-event compute+communication cost floor; ``w`` is the
+steady-state width ⟨sqrt(w²)⟩).  Small Δ throttles u, large Δ pays
+unbounded width — the maximizer Δ* is interior, which is exactly the
+paper's qualitative claim and what tests/test_experiments.py asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .sweep import SweepResult, WindowSweep, run_window_sweep
+
+
+def efficiency(u, w):
+    """Utilization per unit width-bounded cost, u / (1 + w) (elementwise)."""
+    return np.asarray(u, dtype=float) / (1.0 + np.asarray(w, dtype=float))
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimalWindow:
+    """The efficiency curve of one (L, N_V) grid point and its maximizer."""
+
+    L: int
+    n_v: int
+    deltas: tuple[float, ...]      # sorted, as swept (inf allowed, last)
+    eff: tuple[float, ...]         # efficiency per Δ, same order
+    u: tuple[float, ...]
+    w: tuple[float, ...]
+    delta_star: float              # grid maximizer of the efficiency
+    eff_star: float
+    interior: bool                 # Δ* strictly inside the swept grid
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["deltas"] = ["inf" if math.isinf(x) else x for x in self.deltas]
+        for k in ("deltas", "eff", "u", "w"):
+            d[k] = list(d[k])
+        return d
+
+
+def find_optimal_window(result: SweepResult, *, L: int,
+                        n_v: int) -> OptimalWindow:
+    """Locate Δ* on the swept grid of one (L, N_V) point.
+
+    Sorts the records by Δ (inf last), computes the efficiency curve, and
+    returns the grid argmax.  ``interior`` reports whether the maximum sits
+    strictly between the smallest and largest swept Δ — the paper's
+    qualitative prediction for any grid wide enough to bracket the
+    trade-off.
+    """
+    recs = sorted(result.select(L=L, n_v=n_v), key=lambda r: r.delta)
+    if not recs:
+        raise ValueError(f"no records for L={L}, n_v={n_v}")
+    deltas = tuple(r.delta for r in recs)
+    u = tuple(r.u for r in recs)
+    w = tuple(r.w for r in recs)
+    eff = efficiency(u, w)
+    i = int(np.argmax(eff))
+    return OptimalWindow(
+        L=L, n_v=n_v, deltas=deltas, eff=tuple(float(e) for e in eff),
+        u=u, w=w, delta_star=deltas[i], eff_star=float(eff[i]),
+        interior=0 < i < len(deltas) - 1)
+
+
+def optimal_windows(spec_or_result: WindowSweep | SweepResult
+                    ) -> list[OptimalWindow]:
+    """Δ* for every (L, N_V) grid point of a sweep (running it if needed)."""
+    result = (spec_or_result if isinstance(spec_or_result, SweepResult)
+              else run_window_sweep(spec_or_result))
+    return [find_optimal_window(result, L=int(L), n_v=int(n_v))
+            for L in result.spec.Ls for n_v in result.spec.n_vs]

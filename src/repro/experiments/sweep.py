@@ -1,0 +1,251 @@
+"""Batched window-sweep experiments: the paper's systematic study as one spec.
+
+The paper's core results are sweeps: vary the ring size L, the volume load
+per processor N_V, and the moving-window width Δ, then measure steady-state
+utilization, horizon width, and progress rate (Kolakowska & Novotny,
+cs/0211013; update statistics follow-up cond-mat/0306222).  A
+``WindowSweep`` describes the full grid; ``run_window_sweep`` executes it.
+
+Execution model: ring shapes differ across (L, N_V), so those axes are
+separate compiles — but the whole Δ axis of one grid point runs in a
+*single* device pass.  ``PDESEngine.init_sweep`` lays the Δ grid on the
+ensemble axis (``B = n_windows * replicas`` rows, a per-row Δ operand all
+the way down into the fused kernel), which is the flattened form of
+vmapping the window state over Δ on top of the replica batch.  The serial
+per-Δ loop (``serial_window_sweep``) is kept as the bit-identical oracle —
+window ``w`` of the batched run consumes the counter-stream slice
+``trial_base = w * replicas``, so the two agree exactly, not statistically
+(tests/test_experiments.py); it is also the baseline the ``window_sweep``
+benchmark beats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+from typing import Sequence
+
+import numpy as np
+
+from ..core import measurement
+from ..core.engine import PDESEngine
+from ..core.ensemble import default_burn_in
+from ..core.horizon import PDESConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSweep:
+    """One batched window-sweep study (the paper's full grid as a spec).
+
+    Attributes:
+      Ls: ring sizes (number of PEs).
+      n_vs: volume loads per PE (N_V in the paper).
+      deltas: moving-window widths; ``math.inf`` = unconstrained scheme.
+      replicas: independent trajectories per (L, N_V, Δ) point.
+      n_steps: recorded measurement steps per grid point.
+      burn_in: steps discarded before measurement; None = heuristic
+        (``ensemble.default_burn_in`` of the widest window in the sweep).
+      backend: any single-device ``PDESEngine`` backend.
+      window: "exact" | "stale" GVT window mode.
+      k_fuse: engine chunk depth.
+      rd_mode: random-deposition limit (drop the causality rule).
+      border_both: Eq. (1) literal both-neighbor check (PDESConfig).
+      steady_frac: trailing fraction of the recorded series treated as
+        steady state when reducing (``measurement.sweep_reduce``).
+      seed: counter-stream seed; grid points are decorrelated by their
+        trial-index blocks, not by reseeding.
+    """
+
+    Ls: Sequence[int] = (64,)
+    n_vs: Sequence[int] = (1,)
+    deltas: Sequence[float] = (math.inf,)
+    replicas: int = 16
+    n_steps: int = 400
+    burn_in: int | None = None
+    backend: str = "reference"
+    window: str = "exact"
+    k_fuse: int = 16
+    rd_mode: bool = False
+    border_both: bool = False
+    steady_frac: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.Ls or not self.n_vs or not self.deltas:
+            raise ValueError("Ls, n_vs and deltas must all be non-empty")
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        if len(set(self.deltas)) != len(self.deltas):
+            raise ValueError(f"duplicate window widths: {self.deltas}")
+
+    @property
+    def n_windows(self) -> int:
+        return len(self.deltas)
+
+    @property
+    def n_trajectories(self) -> int:
+        """Trajectories advanced per (L, N_V) grid point in one device pass."""
+        return self.n_windows * self.replicas
+
+    def burn_in_for(self, cfg: PDESConfig) -> int:
+        """Shared burn-in of one grid point: the widest window dominates."""
+        if self.burn_in is not None:
+            return self.burn_in
+        return max(
+            default_burn_in(dataclasses.replace(cfg, delta=d))
+            for d in self.deltas)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRecord:
+    """Per-(L, N_V, Δ) steady-state estimates (ensemble mean ± std. error)."""
+
+    L: int
+    n_v: int
+    delta: float
+    u: float
+    u_err: float
+    w2: float
+    w2_err: float
+    w: float
+    wa: float
+    spread: float
+    rate: float
+    rate_err: float
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        # JSON has no inf literal; the canonical on-disk spelling is "inf".
+        if math.isinf(self.delta):
+            d["delta"] = "inf"
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """All records of one executed sweep, plus selection helpers."""
+
+    spec: WindowSweep
+    records: tuple[SweepRecord, ...]
+
+    def select(self, *, L: int | None = None, n_v: int | None = None,
+               delta: float | None = None) -> list[SweepRecord]:
+        out = []
+        for r in self.records:
+            if L is not None and r.L != L:
+                continue
+            if n_v is not None and r.n_v != n_v:
+                continue
+            if delta is not None and r.delta != delta:
+                continue
+            out.append(r)
+        return out
+
+    def to_json(self, path: str | pathlib.Path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        spec = dataclasses.asdict(self.spec)
+        spec["Ls"] = list(spec["Ls"])
+        spec["n_vs"] = list(spec["n_vs"])
+        spec["deltas"] = ["inf" if math.isinf(d) else d
+                         for d in spec["deltas"]]
+        path.write_text(json.dumps(
+            {"spec": spec, "records": [r.as_dict() for r in self.records]},
+            indent=1))
+        return path
+
+
+def _grid_point_records(spec: WindowSweep, cfg: PDESConfig,
+                        red: dict) -> list[SweepRecord]:
+    out = []
+    for w, d in enumerate(spec.deltas):
+        out.append(SweepRecord(
+            L=cfg.L, n_v=cfg.n_v, delta=float(d),
+            u=float(red["u"][w]), u_err=float(red["u_err"][w]),
+            w2=float(red["w2"][w]), w2_err=float(red["w2_err"][w]),
+            w=float(red["w"][w]), wa=float(red["wa"][w]),
+            spread=float(red["spread"][w]),
+            rate=float(red["rate"][w]), rate_err=float(red["rate_err"][w])))
+    return out
+
+
+def _engine(spec: WindowSweep, cfg: PDESConfig) -> PDESEngine:
+    return PDESEngine(cfg, backend=spec.backend, window=spec.window,
+                      k_fuse=spec.k_fuse)
+
+
+def run_window_sweep(spec: WindowSweep) -> SweepResult:
+    """Execute a sweep: one batched device pass per (L, N_V) grid point.
+
+    Every Δ (and every replica) of a grid point advances in the same engine
+    call — ``spec.n_trajectories`` rows per pass — then
+    ``measurement.sweep_reduce`` collapses the batch to per-Δ steady-state
+    estimates.
+    """
+    records = []
+    grid_base = 0
+    for L in spec.Ls:
+        for n_v in spec.n_vs:
+            cfg = PDESConfig(L=int(L), n_v=int(n_v), delta=math.inf,
+                             rd_mode=spec.rd_mode,
+                             border_both=spec.border_both)
+            eng = _engine(spec, cfg)
+            state, drows = eng.init_sweep(spec.deltas, spec.replicas)
+            burn = spec.burn_in_for(cfg)
+            if burn:
+                state = eng.burn_in(state, spec.seed, burn, deltas=drows,
+                                    trial_base=grid_base)
+            _, stats = eng.run(state, spec.seed, spec.n_steps, deltas=drows,
+                               trial_base=grid_base)
+            red = measurement.sweep_reduce(
+                stats, spec.n_windows, spec.replicas,
+                steady_frac=spec.steady_frac)
+            records.extend(_grid_point_records(spec, cfg, red))
+            grid_base += spec.n_trajectories
+    return SweepResult(spec=spec, records=tuple(records))
+
+
+def serial_window_sweep(spec: WindowSweep) -> SweepResult:
+    """The same study as a serial per-Δ engine loop (oracle + baseline).
+
+    Window ``w`` runs with a static ``cfg.delta`` and
+    ``trial_base = w * replicas``, i.e. on exactly the counter-stream rows
+    the batched pass assigns it — trajectories are bit-identical to
+    ``run_window_sweep``, at one engine call per Δ instead of one per grid
+    point.
+    """
+    records = []
+    grid_base = 0
+    for L in spec.Ls:
+        for n_v in spec.n_vs:
+            per_delta_stats = []
+            burn = None
+            for w, d in enumerate(spec.deltas):
+                cfg = PDESConfig(L=int(L), n_v=int(n_v), delta=float(d),
+                                 rd_mode=spec.rd_mode,
+                                 border_both=spec.border_both)
+                if burn is None:
+                    burn = spec.burn_in_for(cfg)
+                eng = _engine(spec, cfg)
+                state = eng.init(spec.replicas)
+                base = grid_base + w * spec.replicas
+                if burn:
+                    state = eng.burn_in(state, spec.seed, burn,
+                                        trial_base=base)
+                _, stats = eng.run(state, spec.seed, spec.n_steps,
+                                   trial_base=base)
+                per_delta_stats.append(stats)
+            joined = type(per_delta_stats[0])(*(
+                np.concatenate([np.asarray(getattr(s, f)) for s in
+                                per_delta_stats], axis=1)
+                for f in per_delta_stats[0]._fields))
+            red = measurement.sweep_reduce(
+                joined, spec.n_windows, spec.replicas,
+                steady_frac=spec.steady_frac)
+            cfg0 = PDESConfig(L=int(L), n_v=int(n_v), delta=math.inf,
+                              rd_mode=spec.rd_mode,
+                              border_both=spec.border_both)
+            records.extend(_grid_point_records(spec, cfg0, red))
+            grid_base += spec.n_trajectories
+    return SweepResult(spec=spec, records=tuple(records))

@@ -15,7 +15,7 @@ from ..core import horizon
 from ..core.horizon import PDESConfig
 from . import tiling
 from .pdes_step import pdes_step
-from .pdes_multistep import pdes_multistep, pdes_multistep_counter
+from .pdes_multistep import pdes_multistep, pdes_multistep_counter  # noqa: F401  (re-export)
 
 
 def ring_halo(tau: jax.Array) -> jax.Array:

@@ -74,9 +74,14 @@ def _kernel_bits(tau_in_ref, bits_ref, tau_ref, *stat_refs,
     _write_step(tau_ref, stat_refs, tau_next, moments)
 
 
-def _kernel_counter(ctr_ref, tau_in_ref, tau_ref, *stat_refs,
+def _kernel_counter(ctr_ref, tau_in_ref, *refs,
                     n_v: int, delta: float, rd_mode: bool, border_both: bool,
-                    block_b: int):
+                    block_b: int, has_delta_col: bool):
+    if has_delta_col:
+        delta_ref, tau_ref, *stat_refs = refs
+        delta = delta_ref[...]              # (b, 1) per-row window widths
+    else:
+        tau_ref, *stat_refs = refs
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -161,6 +166,7 @@ def pdes_multistep(
 def pdes_multistep_counter(
     tau: jax.Array,
     ctr: jax.Array,
+    delta_col: jax.Array | None = None,
     *,
     k_steps: int,
     n_v: int,
@@ -179,6 +185,11 @@ def pdes_multistep_counter(
         Steps k = 0..k_steps-1 consume stream step ``step0 + k``; the
         trajectory is bit-identical to feeding ``events.counter_bits`` into
         ``pdes_multistep``.
+      delta_col: optional (B, 1) per-row window widths.  When given, the
+        window bound becomes a *batched operand*: each ensemble row applies
+        its own Δ (``inf`` rows = unconstrained) and the static ``delta``
+        is ignored.  This is how one kernel pass serves a whole window
+        sweep — the Δ grid rides on the ensemble axis.
       k_steps: number of fused steps (static).
 
     Returns: same as ``pdes_multistep``.
@@ -189,10 +200,15 @@ def pdes_multistep_counter(
     bb = pick_divisor_block(B, block_b)
     kern = functools.partial(_kernel_counter, n_v=n_v, delta=delta,
                              rd_mode=rd_mode, border_both=border_both,
-                             block_b=bb)
+                             block_b=bb, has_delta_col=delta_col is not None)
     in_specs = [
         pl.BlockSpec((1, 4), lambda i, k: (0, 0)),
         pl.BlockSpec((bb, L), lambda i, k: (i, 0)),
     ]
-    return _call_multistep(kern, (ctr, tau), in_specs, B, L, k_steps, bb,
+    inputs = (ctr, tau)
+    if delta_col is not None:
+        assert delta_col.shape == (B, 1), delta_col.shape
+        in_specs.append(pl.BlockSpec((bb, 1), lambda i, k: (i, 0)))
+        inputs = (ctr, tau, delta_col.astype(tau.dtype))
+    return _call_multistep(kern, inputs, in_specs, B, L, k_steps, bb,
                            tau.dtype, interpret)

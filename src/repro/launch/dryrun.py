@@ -20,14 +20,12 @@ The PDES core itself is also dry-runnable as the pseudo-arch ``pdes-core``
 import argparse
 import dataclasses
 import json
-import math
 import pathlib
 import time
 import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, cell_is_runnable, get_config, get_shape
 from ..configs.base import SHAPES

@@ -13,7 +13,6 @@ per-device shard shapes).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16

@@ -10,7 +10,6 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, ShapeConfig
-from ..models import build_model
 
 WHISPER_ENC_LEN = 1536    # stub frontend frames for decode cells (~30 s audio)
 

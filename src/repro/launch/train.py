@@ -14,14 +14,11 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
 from ..data.pipeline import DataConfig, make_batch
 from ..distributed.delta_sync import DeltaScheduler, DeltaSyncConfig
-from ..distributed.sharding import Parallelism
-from ..launch.mesh import make_host_mesh
 from ..optim.adamw import AdamWConfig
 from ..train.fault import FaultInjector, RecoveryConfig, TrainController
 from ..train.train_step import init_train_state, make_train_step

@@ -16,11 +16,7 @@ soft-capping (gemma-2), and bidirectional mode (whisper encoder).
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Callable
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

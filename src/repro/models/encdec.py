@@ -14,9 +14,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .attention import blockwise_attention, decode_attention
+from .attention import decode_attention
 from .flash import flash_attention
-from .layers import (dense_init, embed_init, embed_lookup, mlp, mlp_init,
+from .layers import (embed_init, embed_lookup, mlp, mlp_init,
                      sinusoidal_positions)
 from .transformer import (Constrain, _dt, _noop, _norm, _norm_init, _remat,
                           attn_init, chunked_ce, _qkv)

@@ -20,7 +20,6 @@ GQA, and gemma-2 logit soft-capping.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ mirror apply functions.  Compute dtype and parameter dtype are decoupled
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

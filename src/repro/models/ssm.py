@@ -10,7 +10,6 @@ Decode is the O(1) recurrence with a rolling depthwise-conv cache.
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax

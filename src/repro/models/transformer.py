@@ -13,21 +13,19 @@ repro.distributed.sharding) so model code stays mesh-agnostic.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .attention import (attention, blockwise_attention, decode_attention,
+from .attention import (blockwise_attention, decode_attention,
                         packed_causal_attention, swa_attention)
-from .layers import (act_fn, apply_rope, dense_init, embed_init, embed_lookup,
-                     layernorm, layernorm_init, mlp, mlp_init, pad_vocab,
-                     rmsnorm, rmsnorm_init)
+from .layers import (apply_rope, dense_init, embed_init, embed_lookup,
+                     layernorm, layernorm_init, mlp, mlp_init, rmsnorm,
+                     rmsnorm_init)
 from .moe import moe_apply, moe_init
-from .ssm import (ssm_apply, ssm_decode_step, ssm_init, ssm_init_cache)
 from typing import TYPE_CHECKING
 if TYPE_CHECKING:  # avoid circular import; hints only
     from ..configs.base import ModelConfig

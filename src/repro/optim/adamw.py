@@ -7,7 +7,6 @@ blow the HBM budget (config's param_dtype doubles as the opt-state dtype).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ bytes drop 4× vs f32 (2× vs bf16).  Collective-byte impact is measured in
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

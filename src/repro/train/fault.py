@@ -20,11 +20,10 @@ from __future__ import annotations
 import dataclasses
 import pathlib
 
-import jax
 import numpy as np
 
 from . import checkpoint
-from ..distributed.delta_sync import DeltaScheduler, DeltaSyncConfig
+from ..distributed.delta_sync import DeltaScheduler
 
 
 class SimulatedFailure(RuntimeError):

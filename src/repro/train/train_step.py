@@ -1,17 +1,13 @@
 """Train/serve step factories with sharding annotations and microbatching."""
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from ..configs.base import ModelConfig, ShapeConfig
-from ..distributed.sharding import (Parallelism, batch_pspecs, cache_pspecs,
-                                    make_constrain, param_pspecs, to_shardings)
+from ..configs.base import ModelConfig
+from ..distributed.sharding import Parallelism, make_constrain, param_pspecs
 from ..models import build_model
 from ..optim import adamw
 from ..optim.adamw import AdamWConfig

@@ -1,18 +1,15 @@
 """Checkpoint/restore, elastic resharding, and failure-recovery training."""
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, make_batch
 from repro.optim.adamw import AdamWConfig
 from repro.train import checkpoint
-from repro.train.fault import (FaultInjector, RecoveryConfig, SimulatedFailure,
-                               TrainController)
+from repro.train.fault import FaultInjector, RecoveryConfig, TrainController
 from repro.train.train_step import init_train_state, make_train_step
 
 

@@ -1,13 +1,11 @@
 """Config registry integrity + serve engine end-to-end on a reduced model."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import (ARCH_IDS, LONG_CONTEXT_SKIPS, SHAPES,
-                           cell_is_runnable, get_config, get_shape)
+from repro.configs import (ARCH_IDS, SHAPES, cell_is_runnable, get_config,
+                           get_shape)
 from repro.models import build_model
 from repro.serve.engine import Request, ServeEngine
 

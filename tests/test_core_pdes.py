@@ -4,10 +4,8 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import (PDESConfig, ensemble, horizon, measurement, scaling,
-                        theory)
+from repro.core import PDESConfig, horizon, measurement, scaling, theory
 
 KEY = jax.random.key(42)
 

@@ -1,8 +1,6 @@
 """Δ-window bounded-asynchrony scheduler: paper-fit agreement + invariants."""
 import numpy as np
-import pytest
 
-from repro.core.theory import u_rd
 from repro.distributed.delta_sync import (DeltaScheduler, DeltaSyncConfig,
                                           gated_microbatch_weights,
                                           predicted_utilization)

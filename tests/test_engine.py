@@ -8,11 +8,10 @@ needs a multi-device subprocess.)
 """
 import math
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import PDESConfig, horizon
+from repro.core import PDESConfig
 from repro.core.engine import BACKENDS, EngineConfig, PDESEngine
 
 SINGLE = ("reference", "pallas", "pallas_multistep")

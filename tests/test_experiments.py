@@ -1,0 +1,164 @@
+"""Window-sweep subsystem: batched-vs-serial parity, Δ=inf limit, bounds.
+
+The batched sweep's contract is *bit-identity* with a serial per-Δ engine
+loop: ``PDESEngine.init_sweep`` lays the Δ grid on the ensemble axis and
+assigns window ``w`` the counter-stream rows ``trial_base = w * replicas``,
+so the serial oracle running those rows produces the exact same float32
+trajectories — asserted with array_equal, never allclose.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import PDESConfig, measurement
+from repro.core.engine import PDESEngine
+from repro.experiments import (WindowSweep, efficiency, find_optimal_window,
+                               optimal_windows, run_window_sweep,
+                               serial_window_sweep)
+
+SINGLE = ("reference", "pallas", "pallas_multistep")
+
+
+@pytest.mark.parametrize("backend", SINGLE)
+def test_batched_sweep_bit_identical_to_serial_loop(backend):
+    """One batched pass == per-Δ loop: same tau, offset, and records."""
+    cfg = PDESConfig(L=64, n_v=2)
+    deltas = (0.5, 4.0, math.inf)
+    R = 4
+    eng = PDESEngine(cfg, backend=backend, k_fuse=8)
+    st, drows = eng.init_sweep(deltas, R)
+    st = eng.burn_in(st, 3, 24, deltas=drows)
+    st, _ = eng.run(st, 3, 16, deltas=drows)
+    for w, d in enumerate(deltas):
+        cfg_w = dataclasses.replace(cfg, delta=float(d))
+        eng_w = PDESEngine(cfg_w, backend=backend, k_fuse=8)
+        s2 = eng_w.burn_in(eng_w.init(R), 3, 24, trial_base=w * R)
+        s2, _ = eng_w.run(s2, 3, 16, trial_base=w * R)
+        rows = slice(w * R, (w + 1) * R)
+        np.testing.assert_array_equal(
+            np.asarray(st.tau)[rows], np.asarray(s2.tau),
+            err_msg=f"{backend} delta={d}")
+        np.testing.assert_array_equal(
+            np.asarray(st.offset)[rows], np.asarray(s2.offset),
+            err_msg=f"{backend} delta={d}")
+
+
+def test_run_window_sweep_matches_serial_records():
+    """The experiment layer reduces both paths to identical records."""
+    spec = WindowSweep(Ls=(32, 48), n_vs=(1, 3), deltas=(1.0, 8.0, math.inf),
+                       replicas=4, n_steps=48, burn_in=32,
+                       backend="pallas_multistep", k_fuse=8, seed=5)
+    batched = run_window_sweep(spec)
+    serial = serial_window_sweep(spec)
+    assert batched.records == serial.records
+    assert len(batched.records) == 2 * 2 * 3
+    # grid bookkeeping: every (L, n_v, Δ) combination appears exactly once
+    keys = {(r.L, r.n_v, r.delta) for r in batched.records}
+    assert len(keys) == len(batched.records)
+
+
+def test_delta_inf_rows_reproduce_unconstrained_case():
+    """inf rows of a sweep == a plain engine run with no window at all."""
+    cfg = PDESConfig(L=48, n_v=1)          # delta defaults to inf
+    R = 4
+    eng = PDESEngine(cfg, backend="reference", k_fuse=8)
+    st, drows = eng.init_sweep((2.0, math.inf), R)
+    st, _ = eng.run(st, 9, 32, deltas=drows)
+    plain = PDESEngine(cfg, backend="reference", k_fuse=8)
+    s2, _ = plain.run(plain.init(R), 9, 32, trial_base=R)
+    np.testing.assert_array_equal(np.asarray(st.tau)[R:], np.asarray(s2.tau))
+    np.testing.assert_array_equal(np.asarray(st.offset)[R:],
+                                  np.asarray(s2.offset))
+
+
+def test_width_bounded_by_window_for_small_delta():
+    """Hard bound: horizon extent <= Δ + max increment, per step and row."""
+    cfg = PDESConfig(L=64, n_v=1)
+    deltas = (0.5, 2.0, 8.0)
+    R = 4
+    eng = PDESEngine(cfg, backend="pallas_multistep", k_fuse=8)
+    st, drows = eng.init_sweep(deltas, R)
+    st = eng.burn_in(st, 1, 128, deltas=drows)
+    _, stats = eng.run(st, 1, 64, deltas=drows)
+    eta_max = 25 * math.log(2)             # decode_words: -log(2^-25)
+    spread = np.asarray(stats.max_dev) + np.asarray(stats.min_dev)  # (T, B)
+    per_window = spread.reshape(spread.shape[0], len(deltas), R)
+    for w, d in enumerate(deltas):
+        assert per_window[:, w].max() <= d + eta_max
+    # and the bound is doing real work: the tightest window's horizon is
+    # strictly narrower than the loosest one's
+    assert per_window[:, 0].mean() < per_window[:, -1].mean()
+
+
+def test_sweep_reduce_shapes_and_errors():
+    spec = WindowSweep(Ls=(32,), deltas=(1.0, math.inf), replicas=3,
+                       n_steps=32, burn_in=16, seed=2)
+    res = run_window_sweep(spec)
+    assert all(np.isfinite([r.u, r.w2, r.rate, r.spread]).all()
+               for r in res.records)
+    with pytest.raises(ValueError):
+        measurement.steady_start(10, steady_frac=0.0)
+    with pytest.raises(ValueError):
+        WindowSweep(deltas=())
+    with pytest.raises(ValueError):
+        WindowSweep(deltas=(1.0, 1.0))
+    eng = PDESEngine(PDESConfig(L=16), backend="reference")
+    with pytest.raises(ValueError):        # wrong deltas length
+        eng.run(eng.init(4), 0, 4, deltas=np.ones(3))
+
+
+def test_optimal_window_interior_on_synthetic_curve():
+    """Δ* maximizes u/(1+w); rising u + rising w => interior optimum."""
+    spec = WindowSweep(Ls=(32,), deltas=(0.5, 2.0, 8.0), replicas=2,
+                       n_steps=16, burn_in=8, seed=4)
+    res = run_window_sweep(spec)
+    # synthetic override of the physics: u saturating, w growing
+    synth = [(0.3, 0.0), (0.8, 1.0), (0.9, 3.0)]
+    recs = tuple(dataclasses.replace(r, u=u, w=w)
+                 for (u, w), r in zip(synth, sorted(res.records,
+                                                    key=lambda r: r.delta)))
+    ow = find_optimal_window(dataclasses.replace(res, records=recs),
+                             L=32, n_v=1)
+    # curve: 0.3/1, 0.8/2, 0.9/4 -> argmax at the middle grid point
+    assert ow.delta_star == 2.0 and ow.interior
+    np.testing.assert_allclose(
+        efficiency([r.u for r in recs], [r.w for r in recs]), ow.eff)
+    # and on the real (tiny) sweep the helper runs end to end
+    assert len(optimal_windows(res)) == 1
+
+
+def test_ensemble_steady_state_sweep_matches_plain_steady_state():
+    """ensemble's sweep wrapper: row block 0 runs the same trajectories as a
+    plain engine steady_state call (trial_base 0), so the time/ensemble
+    means agree to reduction-order tolerance."""
+    from repro.core import ensemble
+    cfg = PDESConfig(L=32, n_v=1)
+    deltas = (2.0, math.inf)
+    out = ensemble.steady_state_sweep(
+        cfg, deltas, n_trials=4, seed=3, burn_in_steps=32, measure_steps=32,
+        backend="reference", engine_opts={"k_fuse": 8})
+    assert [ss.cfg.delta for ss in out] == [2.0, math.inf]
+    plain = ensemble.steady_state(
+        dataclasses.replace(cfg, delta=2.0), n_trials=4, seed=3,
+        burn_in_steps=32, measure_steps=32, backend="reference",
+        engine_opts={"k_fuse": 8})
+    np.testing.assert_allclose(out[0].utilization, plain.utilization,
+                               rtol=1e-5)
+    np.testing.assert_allclose(out[0].w2, plain.w2, rtol=1e-4)
+    # windowed row block is the constrained one
+    assert out[0].utilization <= out[1].utilization + 0.05
+
+
+def test_sweep_result_json_roundtrip(tmp_path):
+    spec = WindowSweep(Ls=(16,), deltas=(1.0, math.inf), replicas=2,
+                       n_steps=16, burn_in=8, seed=6)
+    res = run_window_sweep(spec)
+    p = res.to_json(tmp_path / "sweep.json")
+    import json
+    data = json.loads(p.read_text())
+    assert data["spec"]["deltas"] == [1.0, "inf"]
+    assert len(data["records"]) == 2
+    assert data["records"][1]["delta"] == "inf"
+    assert all(math.isfinite(r["u"]) for r in data["records"])

@@ -104,6 +104,7 @@ def test_decode_matches_prefill(arch):
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "mixtral-8x7b", "mamba2-130m",
                                   "zamba2-2.7b", "whisper-base"])
 def test_family_differentiable(arch):

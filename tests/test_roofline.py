@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.launch.hlo_cost import analyze_hlo, parse_computations
+from repro.launch.hlo_cost import analyze_hlo
 from repro.launch.roofline import model_flops_for
 
 
@@ -91,7 +90,6 @@ def test_dynamic_slice_bytes_not_full_operand():
 
 
 def test_collective_parse():
-    import re
     hlo = """
 ENTRY %main (p: f32[16,64]) -> f32[16,64] {
   %p = f32[16,64]{1,0} parameter(0)
