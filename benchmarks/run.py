@@ -75,18 +75,42 @@ def machine_meta() -> dict:
     }
 
 
+_ANALYSIS_VERDICT: dict | None = None
+
+
+def analysis_verdict() -> dict:
+    """Causality-linter verdict stamped into every bench record.
+
+    Computed once per process (the linter itself caches per backend tuple);
+    a crashed linter is recorded as a failing verdict rather than aborting
+    the benchmark run — perf numbers from an unverified tree are still worth
+    keeping, they just carry the stain.
+    """
+    global _ANALYSIS_VERDICT
+    if _ANALYSIS_VERDICT is None:
+        try:
+            from repro.analysis import analysis_verdict as verdict
+            _ANALYSIS_VERDICT = verdict()
+        except Exception as e:  # pragma: no cover - defensive
+            _ANALYSIS_VERDICT = {"ok": False, "error": repr(e)}
+    return _ANALYSIS_VERDICT
+
+
 def _emit(name: str, us_per_call: float, derived: str, payload: dict,
           gate: dict | None = None):
     """Print the CSV line and write the JSON record.
 
     ``gate`` optionally names a hardware-portable regression-gate metric,
     e.g. ``{"metric": "speedup", "value": 2.2, "higher_is_better": True}``;
-    ``--check`` prefers it over raw wall time.
+    ``--check`` prefers it over raw wall time.  Every record also carries the
+    causality-linter verdict (``analysis`` key) so a perf baseline can never
+    silently come from a tree that violates the protocol invariants.
     """
     print(f"{name},{us_per_call:.1f},{derived}")
     OUT.mkdir(parents=True, exist_ok=True)
     payload = dict(payload, name=name, us_per_call=us_per_call,
-                   derived=derived, meta=machine_meta())
+                   derived=derived, meta=machine_meta(),
+                   analysis=analysis_verdict())
     if gate is not None:
         payload["gate"] = gate
     (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1))
@@ -122,7 +146,10 @@ def fig2_utilization_evolution(fast=False):
     assert all(r["u_steady"] > 0.1 for r in rows.values())
     assert rows["L1000_nv100"]["u_steady"] > rows["L1000_nv1"]["u_steady"]
     _emit("fig2_utilization_evolution", (time.time() - t0) * 1e6,
-          f"u_steady(L=1000,nv=1)={rows['L1000_nv1']['u_steady']:.4f}", rows)
+          f"u_steady(L=1000,nv=1)={rows['L1000_nv1']['u_steady']:.4f}", rows,
+          gate={"metric": "u_steady_L1000_nv1",
+                "value": rows["L1000_nv1"]["u_steady"],
+                "higher_is_better": True})
 
 
 # ---------------------------------------------------------------------------
@@ -147,7 +174,9 @@ def eq8_uinf_extrapolation(fast=False):
            "const": ex.coeffs["const"]}
     assert err < 0.01, rec        # C1: within 1% absolute of 24.6461%
     _emit("eq8_uinf_extrapolation", (time.time() - t0) * 1e6,
-          f"u_inf={ex.u_inf:.4f} (paper 0.2465, err {err:.4f})", rec)
+          f"u_inf={ex.u_inf:.4f} (paper 0.2465, err {err:.4f})", rec,
+          gate={"metric": "abs_err_u_inf", "value": err,
+                "higher_is_better": False})
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +239,9 @@ def fig4_kpz_exponents(fast=False):
     _emit("fig4_kpz_exponents", (time.time() - t0) * 1e6,
           f"beta_eff={betas[-1]:.3f}->1/3, alpha_pairs "
           f"{alpha_pairs[0]:.2f}->{alpha_pairs[-1]:.2f}, "
-          f"alpha_inf={alpha_inf:.2f} (KPZ 0.5), beta_rd={beta_rd:.2f}", rec)
+          f"alpha_inf={alpha_inf:.2f} (KPZ 0.5), beta_rd={beta_rd:.2f}", rec,
+          gate={"metric": "beta_eff_late_window", "value": betas[-1],
+                "higher_is_better": True})
 
 
 # ---------------------------------------------------------------------------
@@ -238,10 +269,16 @@ def fig5_util_vs_L(fast=False):
         u100 = out[f"d{delta}_nv100"][str(Ls[-1])]
         urd = out[f"d{delta}_nvrd"][str(Ls[-1])]
         assert u1 < u100 <= urd + 0.03, (delta, u1, u100, urd)
+    # gate: the N_V=100 over N_V=1 utilization lift at the largest L, Δ=10 —
+    # a pure physics ratio (paper's central "many volatilities help" effect)
+    lift = (out["d10.0_nv100"][str(Ls[-1])]
+            / max(out["d10.0_nv1"][str(Ls[-1])], 1e-9))
     _emit("fig5_util_vs_L", (time.time() - t0) * 1e6,
           f"u(L=128,d=10): nv1={out['d10.0_nv1']['128']:.3f} "
           f"nv100={out['d10.0_nv100']['128']:.3f} "
-          f"rd={out['d10.0_nvrd']['128']:.3f}", out)
+          f"rd={out['d10.0_nvrd']['128']:.3f}", out,
+          gate={"metric": "u_lift_nv100_over_nv1_d10", "value": lift,
+                "higher_is_better": True})
 
 
 # ---------------------------------------------------------------------------
@@ -277,7 +314,9 @@ def fig6_uinf_surface(fast=False):
     assert rec["mean_abs_err"] < 0.08, rec["mean_abs_err"]
     _emit("fig6_uinf_surface", (time.time() - t0) * 1e6,
           f"mean|u_inf - fit|={rec['mean_abs_err']:.3f} "
-          f"max={rec['max_abs_err']:.3f}", rec)
+          f"max={rec['max_abs_err']:.3f}", rec,
+          gate={"metric": "mean_abs_err_vs_fit", "value": rec["mean_abs_err"],
+                "higher_is_better": False})
 
 
 # ---------------------------------------------------------------------------
@@ -316,10 +355,15 @@ def fig9_width_saturation(fast=False):
                                    seed=L).w for L in (32, 128)]
     assert w_unc[1] > w_unc[0] * 1.3
     rec = dict(out, Ls=Ls, w_unconstrained=w_unc)
+    # gate: saturated width over the window size at Δ=10, largest L — the
+    # paper's measurability claim is exactly that this ratio stays O(1)
+    w_over_delta = out["d10.0_nv1"]["w"][-1] / 10.0
     _emit("fig9_width_saturation", (time.time() - t0) * 1e6,
           f"w_sat(d=10,nv=1): {out['d10.0_nv1']['w'][0]:.2f}->"
           f"{out['d10.0_nv1']['w'][-1]:.2f} over L={Ls[0]}->{Ls[-1]} "
-          f"(Δ-ceiling); unconstrained {w_unc[0]:.2f}->{w_unc[1]:.2f}", rec)
+          f"(Δ-ceiling); unconstrained {w_unc[0]:.2f}->{w_unc[1]:.2f}", rec,
+          gate={"metric": "w_sat_over_delta_d10", "value": w_over_delta,
+                "higher_is_better": False})
 
 
 # ---------------------------------------------------------------------------
@@ -360,9 +404,14 @@ def fig10_slow_fast(fast=False):
     assert series["f_slow"][0] > 0.55
     assert 1 <= peak_t < n_steps // 2
     assert wa_f[-1] < wa_f[peak_t]
+    # gate: how far the fast-group width has decayed from its transient peak
+    # by the end of the run — the double-peak relaxation signature of Fig. 10
+    decay = float(wa_f[-1] / wa_f[peak_t])
     _emit("fig10_slow_fast", (time.time() - t0) * 1e6,
           f"f_slow(0)={series['f_slow'][0]:.2f}, wa_fast peak at t={peak_t}, "
-          f"u_steady={np.mean(series['u'][-100:]):.3f}", rec)
+          f"u_steady={np.mean(series['u'][-100:]):.3f}", rec,
+          gate={"metric": "wa_fast_decay_from_peak", "value": decay,
+                "higher_is_better": False})
 
 
 # ---------------------------------------------------------------------------
@@ -540,7 +589,9 @@ def bench_pdes_comm(fast=False, backend=None):
     _emit("bench_pdes_comm", (time.time() - t0) * 1e6,
           f"msgs/step {ex['coll_msgs_per_step']:.2f}->"
           f"{cv['coll_msgs_per_step']:.2f} (x{msgs_ratio:.1f} fewer), "
-          f"utilization cost {du:+.4f} at K=16, Δ=100", rec)
+          f"utilization cost {du:+.4f} at K=16, Δ=100", rec,
+          gate={"metric": "msgs_reduction_commavoid_K16", "value": msgs_ratio,
+                "higher_is_better": True})
 
 
 BENCHES = {

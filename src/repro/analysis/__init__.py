@@ -1,0 +1,102 @@
+"""repro.analysis — the causality linter.
+
+A static-analysis pass that traces each backend's step function to a jaxpr
+(and, for the sharded backend, lowered HLO) and proves the paper's protocol
+invariants plus kernel budgets over the traced computation:
+
+==============================  =============================================
+rule                            invariant
+==============================  =============================================
+``stencil-locality``            tau updates reach only {i-1, i, i+1} ring
+                                neighbors (rolls/slices/halos in the jaxpr,
+                                collective-permute pairs in sharded HLO)
+``tau-monotonicity``            no dataflow path can decrease a local
+                                virtual time
+``window-bound``                finite-Δ advances are dominated by a
+                                comparison against the window base
+                                (including the ``deltas=`` sweep operand)
+``dtype-drift``                 no silent f32→f64 / i32→i64 promotion
+``nondeterministic-reduction``  no order-unspecified float collective on
+                                the trajectory path
+``vmem-budget``                 per-BlockSpec VMEM footprint of each Pallas
+                                kernel within budget
+==============================  =============================================
+
+Usage::
+
+    python -m repro.analysis --backend all --format text
+    python -m repro.analysis --backend sharded --format json -o report.json
+
+or programmatically::
+
+    from repro.analysis import analyze
+    report = analyze()          # all backends, all rules
+    assert report.ok, report.to_text()
+"""
+from __future__ import annotations
+
+from ..core.engine import BACKENDS
+from .probes import Probe, ProbeSkip, iter_probes
+from .report import (BackendReport, Finding, Report, apply_waivers,
+                     parse_waivers, summary_verdict)
+from .rules import ALL_RULES
+
+__all__ = ["ALL_RULES", "BACKENDS", "BackendReport", "Finding", "Probe",
+           "ProbeSkip", "Report", "analysis_verdict", "analyze",
+           "analyze_backend", "analyze_probe", "iter_probes"]
+
+
+def analyze_probe(probe: Probe, rules=None, **options) -> list:
+    """Run rules over one probe; returns contextualized findings."""
+    selected = rules or ALL_RULES
+    out = []
+    for name, fn in selected.items():
+        for f in fn(probe, **options):
+            out.append(f.with_context(probe.backend, probe.name))
+    return out
+
+
+def analyze_backend(backend: str, rules=None, waivers=(),
+                    **options) -> BackendReport:
+    """Trace every probe of one backend and run the rule engine."""
+    selected = rules or ALL_RULES
+    rep = BackendReport(backend=backend, rules_run=list(selected))
+    for probe in iter_probes(backend):
+        if isinstance(probe, ProbeSkip):
+            rep.skipped[probe.name] = probe.reason
+            continue
+        rep.findings.extend(analyze_probe(probe, selected, **options))
+    rep.findings = apply_waivers(rep.findings, waivers)
+    return rep
+
+
+def analyze(backends=None, rules=None, waivers=(), **options) -> Report:
+    """Run the full pass.  ``backends=None`` means all four."""
+    if backends is None or backends == "all" or backends == ("all",):
+        backends = BACKENDS
+    elif isinstance(backends, str):
+        backends = (backends,)
+    waivers = parse_waivers(waivers)
+    rep = Report(waivers=waivers)
+    for b in backends:
+        rep.backends.append(
+            analyze_backend(b, rules=rules, waivers=waivers, **options))
+    return rep
+
+
+_VERDICT_CACHE: dict = {}
+
+
+def analysis_verdict(backends=None) -> dict:
+    """Compact pass/fail verdict for embedding in bench JSON metadata.
+
+    Cached per backend tuple — benchmarks call this once per run, not once
+    per bench.  Never raises: a crashed analysis is itself a failing verdict.
+    """
+    key = tuple(BACKENDS if backends is None else backends)
+    if key not in _VERDICT_CACHE:
+        try:
+            _VERDICT_CACHE[key] = summary_verdict(analyze(backends=key))
+        except Exception as e:  # pragma: no cover - defensive
+            _VERDICT_CACHE[key] = {"ok": False, "error": repr(e)}
+    return _VERDICT_CACHE[key]

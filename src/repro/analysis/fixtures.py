@@ -1,0 +1,181 @@
+"""Seeded-violation fixtures: each proves one rule actually fires.
+
+A linter whose rules never fire proves nothing, so each fixture here is a
+small traced function with exactly one protocol violation planted in
+otherwise-idiomatic step code.  ``FIXTURES`` maps fixture name to
+``(probe, expected_rule)``; tests/test_analysis.py asserts the expected
+rule reports a finding on its fixture (red) while the clean backends stay
+green.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .probes import DEFAULT_DELTA, Probe, _trace
+
+
+def _decode(bits, n_v, dtype):
+    from ..core.horizon import decode_words
+    return decode_words(bits[..., 0], bits[..., 1], n_v, dtype)
+
+
+def _std_probe(name, fn, *args, delta=DEFAULT_DELTA, L=16, **kw):
+    g = _trace(fn, *args)
+    return Probe(name, backend=f"fixture:{name}", graph=g, tau_in=0,
+                 tau_out=0, ring_widths=frozenset({L, L + 2}), L_ring=L,
+                 delta=delta, delta_input=None, **kw)
+
+
+def nnn_roll():
+    """Leaked next-nearest-neighbor dependence: left neighbor from roll(2)."""
+    from ..core.horizon import conservative_update
+
+    def fn(tau, bits):
+        is_l, is_r, eta = _decode(bits, 4, tau.dtype)
+        left = jnp.roll(tau, 2, axis=-1)       # BUG: should be roll(1)
+        right = jnp.roll(tau, -1, axis=-1)
+        gvt = jnp.min(tau, axis=-1, keepdims=True)
+        out, _ = conservative_update(tau, left, right, is_l, is_r, eta, gvt,
+                                     delta=DEFAULT_DELTA)
+        return out
+
+    return _std_probe("nnn_roll", fn, jnp.zeros((4, 16), jnp.float32),
+                      jnp.zeros((4, 16, 2), jnp.uint32)), "stencil-locality"
+
+
+def no_window_guard():
+    """Finite Δ claimed, but the advance never compares against the base."""
+    from ..core.horizon import conservative_update
+
+    def fn(tau, bits):
+        is_l, is_r, eta = _decode(bits, 4, tau.dtype)
+        left = jnp.roll(tau, 1, axis=-1)
+        right = jnp.roll(tau, -1, axis=-1)
+        gvt = jnp.min(tau, axis=-1, keepdims=True)
+        # BUG: the window comparison was dropped (delta=inf short-circuits
+        # Eq. (3)) while the config still claims a finite window.
+        out, _ = conservative_update(tau, left, right, is_l, is_r, eta, gvt,
+                                     delta=math.inf)
+        return out
+
+    return _std_probe("no_window_guard", fn,
+                      jnp.zeros((4, 16), jnp.float32),
+                      jnp.zeros((4, 16, 2), jnp.uint32)), "window-bound"
+
+
+def decreasing_tau():
+    """Unguarded tau increment that can be negative (eta - 1)."""
+    from ..core.horizon import conservative_update
+
+    def fn(tau, bits):
+        is_l, is_r, eta = _decode(bits, 4, tau.dtype)
+        left = jnp.roll(tau, 1, axis=-1)
+        right = jnp.roll(tau, -1, axis=-1)
+        gvt = jnp.min(tau, axis=-1, keepdims=True)
+        out, _ = conservative_update(tau, left, right, is_l, is_r,
+                                     eta - 1.0,   # BUG: may be negative
+                                     gvt, delta=DEFAULT_DELTA)
+        return out
+
+    return _std_probe("decreasing_tau", fn,
+                      jnp.zeros((4, 16), jnp.float32),
+                      jnp.zeros((4, 16, 2), jnp.uint32)), "tau-monotonicity"
+
+
+def f64_promotion():
+    """Event decode computed in float64 — silently widens the whole step."""
+    from ..core.horizon import conservative_update
+
+    def fn(tau, bits):
+        w0, w1 = bits[..., 0], bits[..., 1]
+        site = jnp.remainder(w0, jnp.uint32(4)).astype(jnp.int32)
+        # BUG: float64 decode — under x64 this propagates into tau
+        u = (w1 >> jnp.uint32(8)).astype(jnp.float64) * 2.0**-24
+        eta = -jnp.log(u + 2.0**-25)
+        left = jnp.roll(tau, 1, axis=-1)
+        right = jnp.roll(tau, -1, axis=-1)
+        gvt = jnp.min(tau, axis=-1, keepdims=True)
+        out, _ = conservative_update(tau, left, right, site == 0, site == 3,
+                                     eta, gvt, delta=DEFAULT_DELTA)
+        return out
+
+    return _std_probe("f64_promotion", fn,
+                      jnp.zeros((4, 16), jnp.float32),
+                      jnp.zeros((4, 16, 2), jnp.uint32)), "dtype-drift"
+
+
+def nondet_reduction():
+    """Window base from a float psum (mean) instead of the order-free pmin."""
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+
+    from ..compat import shard_map
+    from ..core.horizon import conservative_update
+    from .probes import _abstract_mesh
+
+    ring_n, L_l = 4, 8
+
+    def body(tau, bits):
+        # BUG: deriving the window base via a float all-reduce-sum — its
+        # cross-replica order is unspecified, breaking bit parity.
+        gvt = lax.psum(jnp.min(tau, axis=-1, keepdims=True),
+                       "model") / ring_n
+        is_l, is_r, eta = _decode(bits, 4, tau.dtype)
+        fwd = [(i, (i + 1) % ring_n) for i in range(ring_n)]
+        bwd = [(i, (i - 1) % ring_n) for i in range(ring_n)]
+        lcol = lax.ppermute(tau[:, -1:], "model", perm=fwd)
+        rcol = lax.ppermute(tau[:, :1], "model", perm=bwd)
+        tau_h = jnp.concatenate([lcol, tau, rcol], axis=1)
+        out, _ = conservative_update(
+            tau_h[:, 1:-1], tau_h[:, :-2], tau_h[:, 2:], is_l, is_r, eta,
+            gvt, delta=DEFAULT_DELTA)
+        return out
+
+    mesh = _abstract_mesh(2, ring_n)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(("data",), "model"), P(("data",), "model")),
+                   out_specs=P(("data",), "model"), check_rep=False)
+    L = ring_n * L_l
+    g = _trace(fn, jnp.zeros((4, L), jnp.float32),
+               jnp.zeros((4, L, 2), jnp.uint32))
+    probe = Probe("nondet_reduction", backend="fixture:nondet_reduction",
+                  graph=g, tau_in=0, tau_out=0,
+                  ring_widths=frozenset({L, L_l, L_l + 2}), L_ring=L,
+                  delta=DEFAULT_DELTA, delta_input=None,
+                  shard_L={"model": L_l})
+    return probe, "nondeterministic-reduction"
+
+
+def vmem_blowup():
+    """Kernel tiles far beyond any VMEM budget (whole 1M-site rings)."""
+    import jax
+
+    from ..kernels.pdes_step import pdes_step
+
+    B, Lc = 8, 1 << 20
+
+    def fn(tau_h, bits, gvt):
+        out, _ = pdes_step(tau_h, bits, gvt, n_v=4, delta=DEFAULT_DELTA,
+                           block_b=B, interpret=True)
+        return out
+
+    g = _trace(fn, jax.numpy.zeros((B, Lc + 2), jax.numpy.float32),
+               jax.numpy.zeros((B, Lc, 2), jax.numpy.uint32),
+               jax.numpy.zeros((B, 1), jax.numpy.float32))
+    probe = Probe("vmem_blowup", backend="fixture:vmem_blowup", graph=g,
+                  tau_in=0, tau_out=0,
+                  ring_widths=frozenset({Lc, Lc + 2}), L_ring=Lc,
+                  delta=DEFAULT_DELTA, delta_input=None)
+    return probe, "vmem-budget"
+
+
+FIXTURES = {
+    "nnn_roll": nnn_roll,
+    "no_window_guard": no_window_guard,
+    "decreasing_tau": decreasing_tau,
+    "f64_promotion": f64_promotion,
+    "nondet_reduction": nondet_reduction,
+    "vmem_blowup": vmem_blowup,
+}

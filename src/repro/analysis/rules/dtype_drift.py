@@ -1,0 +1,54 @@
+"""dtype-drift: no silent f32->f64 / i32->i64 promotion on any backend path.
+
+Cross-backend bit-parity (the repo's core testing strategy) only holds if
+every backend computes in exactly the declared dtypes: a stray Python float
+captured as f64, or an unannotated ``arange``, changes rounding and breaks
+trajectory equality between ``horizon.conservative_update`` and the kernels.
+
+Probes are traced under ``enable_x64`` (see probes.py), so with 64-bit types
+*available*, any promotion materializes as a 64-bit aval in the graph.  The
+rule scans every node for 64-bit results (the clean tree is dtype-
+disciplined and has none) and additionally pins the tau output to the
+declared base dtype.
+"""
+from __future__ import annotations
+
+from ..probes import Probe
+from ..report import Finding
+from .common import tau_io, where
+
+RULE = "dtype-drift"
+
+_WIDE = ("float64", "int64", "uint64", "complex128")
+
+
+def check(probe: Probe, **_) -> list:
+    graph = probe.graph
+    findings = []
+    seen = set()
+    for n in graph.nodes:
+        dt = str(getattr(n.aval, "dtype", ""))
+        if dt not in _WIDE or n.prim in ("input", "const"):
+            continue
+        first_drift = all(
+            str(getattr(graph.node(d).aval, "dtype", "")) not in _WIDE
+            for d in n.deps)
+        if not first_drift:
+            continue                   # report the promotion site, not users
+        key = (n.prim, n.src, n.path)
+        if key in seen:
+            continue
+        seen.add(key)
+        findings.append(Finding(
+            rule=RULE, op=n.prim, path=where(n),
+            message=f"silent promotion to {dt} (declared base dtype "
+                    f"{probe.dtype}); 64-bit intermediates break "
+                    "cross-backend bit parity"))
+    _, tau_out = tau_io(graph, probe)
+    out_dt = str(getattr(graph.node(tau_out).aval, "dtype", ""))
+    if out_dt and out_dt != probe.dtype:
+        findings.append(Finding(
+            rule=RULE, op=graph.node(tau_out).prim,
+            path=where(graph.node(tau_out)),
+            message=f"tau output dtype {out_dt} != declared {probe.dtype}"))
+    return findings

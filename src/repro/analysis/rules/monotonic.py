@@ -1,0 +1,246 @@
+"""tau-monotonicity: no dataflow path may decrease a local virtual time.
+
+Conservative PDES correctness requires every PE's local virtual time to be
+non-decreasing: a tau write must be the old value plus a provably
+non-negative increment (or a guarded select between such values).  The rule
+combines two analyses over the flattened graph:
+
+* **interval analysis** — forward value ranges seeded from dtype bounds
+  (every uint32 is clamped to ``[0, 2^32-1]`` after each op, so wrap-around
+  hashes stay bounded).  This is what proves the exponential increment
+  ``eta = -log(u + 2^-25)`` is structurally positive: the top-24-bit decode
+  bounds ``u + 2^-25`` inside ``(0, 1)``, so ``-log`` of it is ``> 0``.
+* **monotone walk** — a memoized structural recursion from the tau output:
+  the old tau value may flow through views, concats (rolls/halos select tau
+  *values*, they never scale them), carries, and selects; it may be combined
+  only via ``add`` with an interval-non-negative term, ``max``, or — the one
+  sanctioned decrease — subtraction of the *ring-uniform* rebase shift
+  (a ``reduce_min``/``pmin`` over the whole ring: subtracting the global
+  minimum shifts all clocks equally and preserves relative causality).
+
+Any other path (e.g. the seeded ``eta - 1.0`` fixture) fails with the
+offending node as witness.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..graph import ring_axis_of
+from ..probes import Probe
+from ..report import Finding
+from .common import (PASSTHROUGH, const_bounds, ring_min_gids, tau_io, where)
+
+RULE = "tau-monotonicity"
+
+_UNK = (-math.inf, math.inf)
+
+_DTYPE_RANGE = {
+    "uint8": (0, 2**8 - 1), "uint16": (0, 2**16 - 1),
+    "uint32": (0, 2**32 - 1), "uint64": (0, 2**64 - 1),
+    "int8": (-2**7, 2**7 - 1), "int16": (-2**15, 2**15 - 1),
+    "int32": (-2**31, 2**31 - 1), "int64": (-2**63, 2**63 - 1),
+    "bool": (0, 1),
+}
+
+
+def _clamp(iv, aval):
+    dt = str(getattr(aval, "dtype", ""))
+    rng = _DTYPE_RANGE.get(dt)
+    if rng is None:
+        return iv
+    return (max(iv[0], rng[0]), min(iv[1], rng[1]))
+
+
+def _dtype_range(aval):
+    return _DTYPE_RANGE.get(str(getattr(aval, "dtype", "")), _UNK)
+
+
+def _mul(a, b):
+    cands = [a[0] * b[0], a[0] * b[1], a[1] * b[0], a[1] * b[1]]
+    cands = [c for c in cands if not math.isnan(c)]
+    return (min(cands), max(cands)) if cands else _UNK
+
+
+def _log(iv):
+    lo = math.log(iv[0]) if iv[0] > 0 else -math.inf
+    hi = math.log(iv[1]) if iv[1] > 0 else -math.inf
+    return (lo, hi)
+
+
+def compute_intervals(graph) -> dict:
+    """Forward value ranges per gid (dtype-clamped after every transfer)."""
+    iv: dict[int, tuple] = {}
+    for n in graph.nodes:
+        d = [iv.get(g, _UNK) for g in n.deps]
+        r = _UNK
+        p = n.prim
+        if p == "const":
+            r = const_bounds(n.params.get("val")) or _UNK
+        elif p == "input":
+            r = _dtype_range(n.aval)
+        elif p == "iota":
+            shape = getattr(n.aval, "shape", None) or (1,)
+            r = (0, max(shape) - 1)
+        elif p in PASSTHROUGH or p in ("scan_xs", "scan_stack", "slice",
+                                       "concatenate", "reduce_min",
+                                       "reduce_max", "pmin", "pmax",
+                                       "ppermute"):
+            r = (min((x[0] for x in d), default=-math.inf),
+                 max((x[1] for x in d), default=math.inf)) if d else _UNK
+        elif p == "add":
+            r = (d[0][0] + d[1][0], d[0][1] + d[1][1])
+        elif p == "sub":
+            r = (d[0][0] - d[1][1], d[0][1] - d[1][0])
+        elif p == "mul":
+            r = _mul(d[0], d[1])
+        elif p == "neg":
+            r = (-d[0][1], -d[0][0])
+        elif p == "abs":
+            lo = 0.0 if d[0][0] <= 0 <= d[0][1] else min(abs(d[0][0]),
+                                                         abs(d[0][1]))
+            r = (lo, max(abs(d[0][0]), abs(d[0][1])))
+        elif p == "exp":
+            r = (math.exp(min(d[0][0], 700)), math.exp(min(d[0][1], 700)))
+        elif p == "log":
+            r = _log(d[0])
+        elif p == "sqrt":
+            r = (math.sqrt(max(d[0][0], 0)),
+                 math.sqrt(max(d[0][1], 0)) if d[0][1] >= 0 else 0.0)
+        elif p == "max":
+            r = (max(d[0][0], d[1][0]), max(d[0][1], d[1][1]))
+        elif p == "min":
+            r = (min(d[0][0], d[1][0]), min(d[0][1], d[1][1]))
+        elif p == "shift_right_logical":
+            if d[1][0] == d[1][1] and float(d[1][0]).is_integer() \
+                    and d[0][0] >= 0:
+                s = int(d[1][0])
+                r = (int(d[0][0]) >> s,
+                     int(min(d[0][1], 2**64)) >> s)
+        elif p in ("rem", "remainder"):
+            if d[1][0] > 0:
+                r = (0 if d[0][0] >= 0 else -d[1][1] + 1, d[1][1] - 1)
+        elif p in ("select_n", "cond_join"):
+            cases = d[1:] if len(d) > 1 else d
+            r = (min(x[0] for x in cases), max(x[1] for x in cases))
+        elif p in ("eq", "ne", "lt", "le", "gt", "ge", "and", "or", "not",
+                   "xor", "is_finite", "reduce_and", "reduce_or"):
+            r = (0, 1)
+        elif p == "reduce_sum":
+            if d and d[0][0] >= 0:
+                r = (0, math.inf)
+        elif p == "psum":
+            if d and d[0][0] >= 0:
+                r = (0, math.inf)
+        elif p == "convert_element_type":
+            r = d[0] if d else _UNK
+        iv[n.gid] = _clamp(r, n.aval)
+    return iv
+
+
+#: prims through which "is (a view of) the old tau value" propagates
+_MONO_VIEWS = PASSTHROUGH | {"slice", "concatenate", "scan_carry",
+                             "scan_stack", "ppermute", "cond_join"}
+
+
+def check(probe: Probe, **_) -> list:
+    graph = probe.graph
+    iv = compute_intervals(graph)
+    window = ring_min_gids(graph, probe)
+    tau_in, tau_out = tau_io(graph, probe)
+    memo: dict[int, tuple] = {}
+
+    def uniform_shift(gid) -> bool:
+        """Ring-uniform rebase amount: derives from a full-ring min."""
+        anc = graph.ancestors(gid)
+        return bool(anc & window)
+
+    def mono(gid):
+        """(ok, witness_gid): is node a non-decreasing function of tau?"""
+        if gid in memo:
+            return memo[gid]
+        memo[gid] = (True, None)       # cycle guard (carries)
+        n = graph.node(gid)
+        res = (False, gid)
+        if gid == tau_in or n.prim == "ref_carry":
+            res = (True, None)
+        elif n.prim == "scan_carry":
+            res = mono(n.deps[0]) if n.deps else (True, None)
+        elif n.prim in ("pallas_out", "ref_swap"):
+            res = mono(n.deps[0])      # dep[1:] are provenance/index only
+        elif n.prim in _MONO_VIEWS:
+            res = (True, None)
+            for i, d in enumerate(n.deps):
+                if n.prim == "cond_join" and i == 0:
+                    continue           # the predicate does not carry values
+                ok, w = mono(d)
+                if not ok:
+                    res = (False, w)
+                    break
+        elif n.prim == "select_n":
+            res = (True, None)
+            for d in n.deps[1:]:
+                ok, w = mono(d)
+                if not ok:
+                    res = (False, w)
+                    break
+        elif n.prim == "add":
+            for i, j in ((0, 1), (1, 0)):
+                ok, _w = mono(n.deps[i])
+                if ok and iv.get(n.deps[j], _UNK)[0] >= 0:
+                    res = (True, None)
+                    break
+            else:
+                res = (False, gid)
+        elif n.prim == "max":
+            oks = [mono(d) for d in n.deps]
+            res = (True, None) if any(ok for ok, _ in oks) else (False, gid)
+        elif n.prim == "sub":
+            ok, _w = mono(n.deps[0])
+            if ok and uniform_shift(n.deps[1]):
+                res = (True, None)      # the sanctioned GVT rebase
+            else:
+                res = (False, gid)
+        memo[gid] = res
+        return res
+
+    findings = []
+
+    def verify(gid, what):
+        ok, witness = mono(gid)
+        if ok:
+            return
+        n = graph.node(witness if witness is not None else gid)
+        lohi = iv.get(n.gid)
+        extra = ""
+        if n.prim == "add" and len(n.deps) == 2:
+            incs = [iv.get(d, _UNK) for d in n.deps]
+            lo = min(x[0] for x in incs)
+            extra = f" (increment may be as low as {lo:.3g})"
+        elif lohi and lohi[0] < 0:
+            extra = f" (value range [{lohi[0]:.3g}, {lohi[1]:.3g}])"
+        findings.append(Finding(
+            rule=RULE, op=n.prim, path=where(n),
+            message=f"{what} is not a provably non-decreasing update of "
+                    f"tau{extra}"))
+
+    verify(tau_out, "tau output")
+    seen = {tau_out}
+    for n in graph.nodes:
+        # only ring-shaped tau carries: stats/offset accumulators are not
+        # virtual times and have no monotonicity obligation
+        if n.prim not in ("scan_carry", "ref_carry") or \
+                "carry_out" not in n.params:
+            continue
+        if ring_axis_of(n.aval, probe.ring_widths) is None:
+            continue
+        if not np.issubdtype(getattr(n.aval, "dtype", np.int32), np.floating):
+            continue
+        if n.deps and tau_in not in graph.ancestors(n.deps[0]):
+            continue                   # loop does not carry tau at all
+        co = n.params["carry_out"]
+        if co not in seen:
+            seen.add(co)
+            verify(co, "loop-carried tau")
+    return findings

@@ -1,0 +1,43 @@
+"""nondeterministic-reduction: no order-sensitive collective on the tau path.
+
+The repo claims *bit-identical* trajectories across backends (the parity
+tests depend on it).  A floating-point ``psum`` / all-reduce-add has
+unspecified reduction order across replicas, so its result may differ
+between topologies — harmless for *statistics* (parity is claimed for
+trajectories, and the stats all-reduce in ``_finish_chunk`` is explicitly
+exempt), fatal if it feeds the trajectory itself (e.g. deriving a window
+base from a mean).  ``pmin``/``pmax`` are order-insensitive and always
+allowed; integer sums are exact and allowed too.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..probes import Probe
+from ..report import Finding
+from .common import tau_io, where
+
+RULE = "nondeterministic-reduction"
+
+_ORDER_SENSITIVE = ("psum", "psum2", "all_reduce_sum")
+
+
+def check(probe: Probe, **_) -> list:
+    graph = probe.graph
+    _, tau_out = tau_io(graph, probe)
+    anc = graph.ancestors(tau_out)
+    findings = []
+    for n in graph.nodes:
+        if n.prim not in _ORDER_SENSITIVE:
+            continue
+        if not np.issubdtype(getattr(n.aval, "dtype", np.int32),
+                             np.floating):
+            continue                   # integer sums are exact
+        if n.gid not in anc:
+            continue                   # stats-only reduction: exempt
+        findings.append(Finding(
+            rule=RULE, op=n.prim, path=where(n),
+            message="order-unspecified floating-point cross-replica sum on "
+                    "the tau dataflow path; bit-identical trajectory parity "
+                    "cannot hold (use pmin/pmax or integer sums)"))
+    return findings

@@ -146,7 +146,8 @@ def _shard_body(tau0, seed, step_base, *, cfg: PDESConfig, dist: DistConfig,
             gvt = lax.pmin(jnp.min(tau, axis=-1, keepdims=True), ring)
         else:
             gvt = jnp.zeros((B_l, 1), dtype)
-        pe_idx = jnp.remainder(l0 - K + jnp.arange(L_l + 2 * K), L_total)
+        pe_idx = jnp.remainder(
+            l0 - K + jnp.arange(L_l + 2 * K, dtype=jnp.int32), L_total)
 
         def one(tau_e, s):
             from .events import counter_bits

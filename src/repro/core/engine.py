@@ -78,6 +78,30 @@ BACKENDS = ("reference", "pallas", "pallas_multistep", "sharded")
 WINDOWS = ("exact", "stale")
 
 
+class UnsupportedSweepError(NotImplementedError):
+    """A window sweep (``deltas=`` / ``trial_base``) hit a backend that
+    cannot run it.  Subclasses ``NotImplementedError`` so existing callers
+    that catch the generic error keep working; structured so tools (e.g. the
+    ``repro.analysis`` backend iterator) can skip-with-reason instead of
+    crashing."""
+
+    def __init__(self, backend: str = "sharded", msg: str | None = None):
+        self.backend = backend
+        super().__init__(msg or (
+            f"backend {backend!r} does not support window sweeps "
+            "(deltas=/trial_base): multi-device sweep sharding is an open "
+            "ROADMAP item ('multi-device window-sweep sharding'). Run the "
+            "sweep on a single-device backend (reference / pallas / "
+            "pallas_multistep), or partition the Δ grid across separate "
+            "sharded runs."))
+
+
+def check_sweep_support(backend: str) -> None:
+    """Raise :class:`UnsupportedSweepError` if ``backend`` can't run sweeps."""
+    if backend == "sharded":
+        raise UnsupportedSweepError(backend)
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Static engine parameters (hashable: used as a jit static argument).
@@ -363,9 +387,7 @@ class PDESEngine:
         seed = jnp.uint32(seed)
         if self.ecfg.backend == "sharded":
             if deltas is not None or trial_base:
-                raise NotImplementedError(
-                    "window sweeps are single-device for now; multi-device "
-                    "sweep sharding is a ROADMAP open item")
+                check_sweep_support(self.ecfg.backend)
             return self._run_sharded(state, seed, n_steps, mode)
         if deltas is not None:
             deltas = jnp.asarray(deltas, state.tau.dtype)

@@ -35,11 +35,32 @@ _OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
 _CALLS = re.compile(r"(?:calls=|to_apply=|body=)%?([\w\.\-]+)")
 _COND = re.compile(r"condition=%?([\w\.\-]+)")
 _TRIP = re.compile(r'known_trip_count"?\s*[:=]\s*\{\s*"?n"?\s*[:=]\s*"?(\d+)')
-_OPCODE = re.compile(r"^(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
-                     r"([a-z][a-z0-9\-]*)\(")
+_OPCODE_AFTER = re.compile(r"\s*([a-z][a-z0-9\-]*)\s*\(")
 
 COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
               "collective-permute")
+
+
+def _result_prefix_len(rhs: str) -> int:
+    """Length of the result-type prefix of an op's RHS.
+
+    Tuple result types nest arbitrarily — ``(f32[2], (f32[4], s32[]))`` —
+    so a balanced-paren scan is required; a ``\\([^)]*\\)`` regex stops at
+    the first ``)`` and mis-locates the opcode (and with it the operand
+    list).  Non-tuple results are ``dtype[dims]{layout?}``.
+    """
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return i + 1
+        return 0
+    m = re.match(r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?", rhs)
+    return m.end() if m else 0
 
 
 def _shape_elems_bytes(text: str):
@@ -68,6 +89,7 @@ class Op:
     opcode: str
     result_text: str
     full_text: str
+    args_start: int = -1      # index of the operand list's "(" in full_text
 
 
 @dataclasses.dataclass
@@ -104,10 +126,17 @@ def parse_computations(hlo: str) -> dict:
         if not m:
             continue
         name, rhs = m.groups()
-        om = _OPCODE.match(rhs)
-        opcode = om.group(1) if om else rhs.split("(")[0].strip().split()[-1]
-        result_text = rhs[:rhs.find(opcode)] if opcode in rhs else rhs
-        cur.ops.append(Op(name, opcode, result_text, rhs))
+        prefix = _result_prefix_len(rhs)
+        om = _OPCODE_AFTER.match(rhs[prefix:]) if prefix else None
+        if om:
+            opcode = om.group(1)
+            args_start = prefix + om.end() - 1
+            result_text = rhs[:prefix]
+        else:
+            opcode = rhs.split("(")[0].strip().split()[-1]
+            args_start = rhs.find("(")
+            result_text = rhs[:rhs.find(opcode)] if opcode in rhs else rhs
+        cur.ops.append(Op(name, opcode, result_text, rhs, args_start))
         sm = _SHAPE_RE.search(result_text)
         if sm:
             cur.shapes[name] = [int(x) for x in sm.group(2).split(",") if x]
@@ -163,9 +192,14 @@ def _split_args(op: Op):
     types (``(s32[], f32[2,2])``) all contain commas that must not split —
     miscounting here shifts operand↔parameter alignment and silently charges
     sliced fusion params their full operand bytes.
+
+    The scan starts at ``op.args_start`` — the opcode's own paren, located
+    while parsing — NOT at the first ``(`` of the line, which for tuple-
+    typed ops (``%t = (f32[2], s32[]) tuple(...)``) belongs to the result
+    type and would mis-split the operand list.
     """
     txt = op.full_text
-    start = txt.find("(")
+    start = op.args_start if op.args_start >= 0 else txt.find("(")
     depth = 0          # paren depth ( )
     nest = 0           # bracket/brace depth [ ] { }
     args, cur = [], []
@@ -319,6 +353,30 @@ class Cost:
         return sum(self.coll.values())
 
 
+_CP_PAIRS = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+_CP_PAIR = re.compile(r"\{(\d+),(\d+)\}")
+
+
+def collective_permutes(hlo: str) -> list:
+    """``source_target_pairs`` of every collective-permute in the HLO text.
+
+    Returns one ``[(source, target), ...]`` list per op carrying the
+    attribute (``collective-permute`` and its ``-start`` async form) — the
+    raw stencil of the program's point-to-point communication, consumed by
+    the ``stencil-locality`` rule in ``repro.analysis``.
+    """
+    out = []
+    for comp in parse_computations(hlo).values():
+        for op in comp.ops:
+            if not op.opcode.startswith("collective-permute"):
+                continue
+            m = _CP_PAIRS.search(op.full_text)
+            if m:
+                out.append([(int(a), int(b))
+                            for a, b in _CP_PAIR.findall(m.group(1))])
+    return out
+
+
 def analyze_hlo(hlo: str, entry: str | None = None) -> Cost:
     comps = parse_computations(hlo)
     # post-pass: record convert-only fusions' source sizes for dot accounting
@@ -350,7 +408,9 @@ def analyze_hlo(hlo: str, entry: str | None = None) -> Cost:
                          if op.opcode == k or op.opcode == k + "-start"), None)
             if kind:
                 if kind == "reduce-scatter":
-                    args = op.full_text[op.full_text.find("("):]
+                    s = op.args_start if op.args_start >= 0 \
+                        else op.full_text.find("(")
+                    args = op.full_text[s:]
                     c.coll[kind] += _shape_elems_bytes(args)
                 else:
                     c.coll[kind] += _shape_elems_bytes(op.result_text)

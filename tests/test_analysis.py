@@ -1,0 +1,173 @@
+"""Causality-linter tests: golden reports + one negative test per rule.
+
+Two halves:
+
+* **golden** — ``analyze_backend`` on the clean tree must reproduce the
+  committed ``tests/golden/analysis_<backend>.json`` byte-for-byte
+  (structurally).  Regenerate after an intentional analyzer/backend change::
+
+      PYTHONPATH=src python - <<'EOF'
+      import json, pathlib
+      from repro.analysis import analyze_backend
+      from repro.core.engine import BACKENDS
+      for b in BACKENDS:
+          p = pathlib.Path("tests/golden") / f"analysis_{b}.json"
+          p.write_text(json.dumps(analyze_backend(b).to_dict(),
+                                  indent=2, sort_keys=True) + "\n")
+      EOF
+
+* **negative** — every rule is proven live by a seeded-violation fixture
+  (``repro.analysis.fixtures``): a linter whose rules never fire proves
+  nothing, so each fixture plants exactly one protocol violation and the
+  test asserts the expected rule reports it.
+"""
+import json
+import pathlib
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.analysis import (ALL_RULES, analyze, analyze_backend,
+                            analyze_probe)
+from repro.analysis.fixtures import FIXTURES
+from repro.core.engine import BACKENDS
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
+
+pytestmark = pytest.mark.analysis
+
+
+# ---------------------------------------------------------------------------
+# golden reports: the clean tree analyzes clean, and identically so
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_golden_report(backend):
+    got = analyze_backend(backend).to_dict()
+    want = json.loads((GOLDEN / f"analysis_{backend}.json").read_text())
+    assert got == want, (
+        f"analysis report for {backend!r} drifted from the golden; if the "
+        f"change is intentional, regenerate (see module docstring)")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_clean_tree_has_zero_findings(backend):
+    rep = analyze_backend(backend)
+    assert rep.ok, "\n".join(str(f) for f in rep.findings)
+    assert sorted(set(rep.rules_run)) == sorted(ALL_RULES)
+
+
+def test_sharded_sweep_skipped_with_reason():
+    rep = analyze_backend("sharded")
+    assert "sweep" in rep.skipped
+    assert "ROADMAP" in rep.skipped["sweep"]
+
+
+# ---------------------------------------------------------------------------
+# negative tests: each rule fires on its seeded-violation fixture
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fixture_fires_expected_rule(name):
+    probe, expected_rule = FIXTURES[name]()
+    findings = analyze_probe(probe)
+    fired = {f.rule for f in findings}
+    assert expected_rule in fired, (
+        f"fixture {name!r} should trip {expected_rule!r}; fired: "
+        f"{sorted(fired)}")
+    hits = [f for f in findings if f.rule == expected_rule]
+    # findings carry context + provenance, not just a verdict
+    assert all(f.backend == probe.backend and f.probe == probe.name
+               for f in hits)
+    assert any(f.op or f.path for f in hits), hits
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fixture_clean_rules_stay_quiet(name):
+    """A planted violation must not cascade into unrelated rules.
+
+    (vmem_blowup is exempt for stencil/window: a whole-ring block trivially
+    also breaks locality and drowns the guard pattern — that cascade is
+    physical, not a false positive.)
+    """
+    probe, expected_rule = FIXTURES[name]()
+    fired = {f.rule for f in analyze_probe(probe)}
+    allowed = {expected_rule}
+    if name == "vmem_blowup":
+        allowed |= {"stencil-locality", "window-bound"}
+    assert fired <= allowed, sorted(fired - allowed)
+
+
+def test_waiver_keeps_finding_but_passes_gate():
+    probe, rule = FIXTURES["decreasing_tau"]()
+    from repro.analysis.report import BackendReport, apply_waivers
+    findings = apply_waivers(analyze_probe(probe), (rule,))
+    assert findings and all(f.waived for f in findings)
+    rep = BackendReport(backend=probe.backend, findings=findings)
+    assert rep.ok                       # waived findings don't fail the gate
+    # a waiver scoped to a different backend does NOT apply
+    findings = apply_waivers(analyze_probe(probe),
+                             (f"{rule}:some_other_backend",))
+    assert not BackendReport(backend=probe.backend, findings=findings).ok
+
+
+def test_vmem_budget_is_configurable():
+    # the clean pallas kernels fit the default budget but not 1 byte
+    rep = analyze_backend("pallas", vmem_budget=1)
+    assert not rep.ok
+    assert {f.rule for f in rep.findings} == {"vmem-budget"}
+
+
+# ---------------------------------------------------------------------------
+# structured sweep error (engine satellite) + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_unsupported_sweep_error_is_structured():
+    from repro.core.engine import UnsupportedSweepError, check_sweep_support
+    with pytest.raises(UnsupportedSweepError) as ei:
+        check_sweep_support("sharded")
+    assert isinstance(ei.value, NotImplementedError)   # old except: clauses
+    assert ei.value.backend == "sharded"
+    assert "ROADMAP" in str(ei.value)
+    check_sweep_support("pallas_multistep")            # no raise
+
+
+def test_cli_json_roundtrip(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "report.json"
+    rc = main(["--backend", "reference", "--format", "json",
+               "-o", str(out)])
+    assert rc == 0
+    printed = json.loads(capsys.readouterr().out)
+    on_disk = json.loads(out.read_text())
+    assert printed == on_disk
+    assert on_disk["ok"] and on_disk["n_findings"] == 0
+    assert [b["backend"] for b in on_disk["backends"]] == ["reference"]
+
+
+def test_cli_rule_subset_and_unknown_args(capsys):
+    from repro.analysis.__main__ import main
+    rc = main(["--backend", "reference", "--rules", "vmem-budget"])
+    assert rc == 0
+    assert "rules=vmem-budget" in capsys.readouterr().out
+    with pytest.raises(SystemExit):
+        main(["--backend", "nope"])
+    with pytest.raises(SystemExit):
+        main(["--rules", "nope"])
+    capsys.readouterr()
+
+
+def test_full_report_shape():
+    rep = analyze(backends="all")
+    d = rep.to_dict()
+    assert d["ok"] is True
+    assert [b["backend"] for b in d["backends"]] == list(BACKENDS)
+    # text rendering mentions every backend and the final verdict line
+    txt = rep.to_text()
+    for b in BACKENDS:
+        assert f"backend={b}" in txt
+    assert txt.splitlines()[-1].startswith("analysis: PASS")

@@ -105,6 +105,71 @@ ENTRY %main (p: f32[16,64]) -> f32[16,64] {
     assert c.coll_msgs == 3
 
 
+def test_split_args_nested_tuple_result():
+    """Tuple-typed results must not be mistaken for the operand list.
+
+    ``%t = (f32[2], (f32[4], s32[])) tuple(%a, %b)`` — the first ``(`` of
+    the RHS belongs to the (arbitrarily nested) result type; splitting from
+    there would yield type fragments instead of operands and shift every
+    downstream operand↔parameter alignment.
+    """
+    from repro.launch.hlo_cost import _split_args, parse_computations
+    hlo = """
+ENTRY %main (a: f32[2], b: f32[4]) -> (f32[2], (f32[4], s32[])) {
+  %a = f32[2]{0} parameter(0)
+  %b = f32[4]{0} parameter(1)
+  %s = s32[] constant(3)
+  %inner = (f32[4], s32[]) tuple(%b, %s)
+  ROOT %t = (f32[2], (f32[4], s32[])) tuple(%a, %inner)
+}
+"""
+    comp = parse_computations(hlo)["main"]
+    ops = {o.name: o for o in comp.ops}
+    assert ops["t"].opcode == "tuple"
+    assert ops["inner"].opcode == "tuple"
+    _texts, names = _split_args(ops["t"])
+    assert names == ["a", "inner"]
+    _texts, names = _split_args(ops["inner"])
+    assert names == ["b", "s"]
+    # nested-tuple analysis must also not crash the cost walk
+    analyze_hlo(hlo, entry="main")
+
+
+def test_split_args_nested_tuple_operands():
+    """Inline tuple-typed operands (commas at bracket depth) don't split."""
+    from repro.launch.hlo_cost import _split_args, parse_computations
+    hlo = """
+ENTRY %main (p: (f32[8,4], s32[2])) -> f32[8,4] {
+  %p = (f32[8,4]{1,0}, s32[2]{0}) parameter(0)
+  ROOT %g = f32[8,4]{1,0} get-tuple-element((f32[8,4], s32[2]) %p), index=0
+}
+"""
+    comp = parse_computations(hlo)["main"]
+    g = [o for o in comp.ops if o.name == "g"][0]
+    assert g.opcode == "get-tuple-element"
+    texts, names = _split_args(g)
+    assert names == ["p"] and len(texts) == 1
+
+
+def test_collective_permute_source_target_pairs():
+    from repro.launch.hlo_cost import collective_permutes
+    hlo = """
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %p = f32[16]{0} parameter(0)
+  %cp0 = f32[16]{0} collective-permute(%p), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %st = (f32[16], f32[16]) collective-permute-start(%cp0), source_target_pairs={{3,2},{2,1},{1,0},{0,3}}
+  ROOT %dn = f32[16]{0} collective-permute-done(%st)
+}
+"""
+    pairs = collective_permutes(hlo)
+    assert pairs == [
+        [(0, 1), (1, 2), (2, 3), (3, 0)],
+        [(3, 2), (2, 1), (1, 0), (0, 3)],
+    ]
+    # ...and on a real lowered ring program: every hop is +-1 on the ring
+    assert collective_permutes("ENTRY %e (x: f32[2]) -> f32[2] {}") == []
+
+
 def test_model_flops_for():
     from repro.configs import get_config, get_shape
     cfg = get_config("llama3.2-1b")
