@@ -594,6 +594,94 @@ def bench_pdes_comm(fast=False, backend=None):
                 "higher_is_better": True})
 
 
+# ---------------------------------------------------------------------------
+# Sharded window sweep — batched Δ-axis on a 2x4 mesh vs serial per-Δ loop
+# ---------------------------------------------------------------------------
+
+_SWEEP_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, math, time
+    import numpy as np
+    from repro.compat import make_mesh
+    from repro.experiments import (WindowSweep, run_window_sweep,
+                                   serial_window_sweep)
+
+    fast = __FAST__
+    mesh = make_mesh((2, 4), ("data", "model"))
+    spec = WindowSweep(
+        Ls=(128 if fast else 256,), n_vs=(10,),
+        deltas=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, math.inf),
+        replicas=8, n_steps=64, burn_in=64, backend="sharded",
+        k_fuse=8, seed=3)
+    res = run_window_sweep(spec, mesh=mesh)       # compile both paths
+    ser = serial_window_sweep(spec, mesh=mesh)
+    # bit-identical records (wa is NaN by the sharded stats contract, and
+    # NaN != NaN, so compare field-wise)
+    for a, b in zip(res.records, ser.records):
+        da, db = a.as_dict(), b.as_dict()
+        wa_a, wa_b = da.pop("wa"), db.pop("wa")
+        assert da == db, (da, db)
+        assert math.isnan(wa_a) and math.isnan(wa_b)
+
+    def timed(fn):
+        best = math.inf
+        for _ in range(3):
+            t0 = time.time()
+            fn()
+            best = min(best, (time.time() - t0) * 1e6)
+        return best
+
+    t_batched = timed(lambda: run_window_sweep(spec, mesh=mesh))
+    t_serial = timed(lambda: serial_window_sweep(spec, mesh=mesh))
+    out = {
+        "spec": {"L": spec.Ls[0], "n_v": 10, "n_windows": spec.n_windows,
+                 "replicas": spec.replicas, "n_steps": spec.n_steps,
+                 "burn_in": spec.burn_in, "backend": spec.backend,
+                 "mesh": {"data": 2, "model": 4}},
+        "us_batched": t_batched, "us_serial": t_serial,
+        "speedup_batched_vs_serial_sharded": t_serial / t_batched,
+        "u_by_delta": {str(r.delta): r.u for r in res.records},
+    }
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def bench_window_sweep_sharded(fast=False):
+    """Mesh-sharded batched window sweep vs the serial per-Δ sharded loop.
+
+    Same contract as ``bench_window_sweep``, one level up the scaling
+    ladder: the (Δ, replica) rows shard over a 2x4 CPU mesh (8 fake
+    devices, hence the subprocess — the main process keeps the 1-device
+    platform), and the batched pass advances all rows in one shard_map
+    call per grid point while the serial baseline makes one mesh pass per
+    Δ on the same counter-stream rows.  Records are asserted bit-identical
+    before timing; the gate metric is the batched-over-serial speedup — a
+    hardware-portable ratio.
+    """
+    t0 = time.time()
+    env = dict(os.environ, PYTHONPATH="src")
+    script = _SWEEP_SHARDED_SCRIPT.replace("__FAST__", repr(bool(fast)))
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    rec = json.loads(line[len("RESULT "):])
+    speedup = rec["speedup_batched_vs_serial_sharded"]
+    # as with bench_window_sweep: the bench only insists batching wins at
+    # all; regression depth is the --check gate's job.
+    assert speedup >= 1.05, rec
+    rec["us_subprocess_total"] = (time.time() - t0) * 1e6
+    _emit("bench_window_sweep_sharded", rec["us_batched"],
+          f"batched {rec['us_batched'] / 1e3:.0f}ms vs serial "
+          f"{rec['us_serial'] / 1e3:.0f}ms (x{speedup:.2f}) over "
+          f"{rec['spec']['n_windows']} windows x {rec['spec']['replicas']} "
+          f"replicas on a 2x4 mesh",
+          rec,
+          gate={"metric": "speedup_batched_vs_serial_sharded",
+                "value": speedup, "higher_is_better": True})
+
+
 BENCHES = {
     "fig2": fig2_utilization_evolution,
     "eq8": eq8_uinf_extrapolation,
@@ -606,6 +694,7 @@ BENCHES = {
     "kernel_fused": bench_kernel_fused,
     "pdes_comm": bench_pdes_comm,
     "window_sweep": bench_window_sweep,
+    "window_sweep_sharded": bench_window_sweep_sharded,
 }
 
 # ---------------------------------------------------------------------------

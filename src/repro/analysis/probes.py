@@ -19,9 +19,11 @@ f32/i32/u32.
 
 The ``sharded`` backend is traced on an :class:`jax.sharding.AbstractMesh`
 (no devices needed); its HLO text (with ``collective-permute``
-``source_target_pairs``) comes from the same abstract lowering.  Its sweep
-probe is skipped-with-reason via :class:`repro.core.engine
-.UnsupportedSweepError` rather than crashing the iterator.
+``source_target_pairs``) comes from the same abstract lowering.  Every
+backend — ``sharded`` included, since multi-device sweep sharding landed —
+yields a sweep probe whose per-row Δ column is a traced operand, so the
+window-bound rule can prove the guard compares against *that* operand on
+every advance site.
 """
 from __future__ import annotations
 
@@ -31,8 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.engine import (BACKENDS, EngineConfig, UnsupportedSweepError,
-                           _make_advance, check_sweep_support)
+from ..core.engine import BACKENDS, EngineConfig, _make_advance
 from ..core.horizon import PDESConfig
 from .graph import Graph, build_graph
 
@@ -89,24 +90,19 @@ def _single_probes(backend: str):
                     ring_widths=frozenset({L, L + 2}), L_ring=L,
                     delta=cfg.delta, delta_input=None)
 
-    try:
-        check_sweep_support(backend)
-    except UnsupportedSweepError as e:       # pragma: no cover - sharded only
-        yield ProbeSkip("sweep", str(e))
-    else:
-        ecfg = EngineConfig(backend=backend, window="exact", k_fuse=K,
-                            interpret=True)
-        advance = _make_advance(cfg, ecfg, B, L)
+    ecfg = EngineConfig(backend=backend, window="exact", k_fuse=K,
+                        interpret=True)
+    advance = _make_advance(cfg, ecfg, B, L)
 
-        def fn(tau, step0, seed, delta_col, b0, advance=advance):
-            return advance(tau, step0, seed, K, delta_col, b0)
+    def fn(tau, step0, seed, delta_col, b0, advance=advance):
+        return advance(tau, step0, seed, K, delta_col, b0)
 
-        g = _trace(fn, jnp.zeros((B, L), jnp.float32), jnp.int32(0),
-                   jnp.uint32(0), jnp.full((B, 1), DEFAULT_DELTA, jnp.float32),
-                   jnp.int32(0))
-        yield Probe("sweep", backend, g, tau_in=0, tau_out=0,
-                    ring_widths=frozenset({L, L + 2}), L_ring=L,
-                    delta=0.0, delta_input=3)
+    g = _trace(fn, jnp.zeros((B, L), jnp.float32), jnp.int32(0),
+               jnp.uint32(0), jnp.full((B, 1), DEFAULT_DELTA, jnp.float32),
+               jnp.int32(0))
+    yield Probe("sweep", backend, g, tau_in=0, tau_out=0,
+                ring_widths=frozenset({L, L + 2}), L_ring=L,
+                delta=0.0, delta_input=3)
 
     if backend in ("pallas", "pallas_multistep"):
         # production-shape trace: the VMEM rule sizes real BlockSpecs here
@@ -138,31 +134,45 @@ def _sharded_probes():
     from jax.sharding import PartitionSpec as P
 
     from ..compat import shard_map
-    from ..core.distributed import DistConfig, _shard_body
+    from ..core.distributed import STAT_KEYS, DistConfig, _shard_body
 
     B, L, ens, ring = 4, 32, 2, 4
     L_l = L // ring
     cfg = PDESConfig(L=L, n_v=4, delta=DEFAULT_DELTA)
     mesh = _abstract_mesh(ens, ring)
-    for name, mode, K in (("step", "exact", 2), ("stale", "commavoid", 4)):
+    # (name, mode, K, with Δ-column sweep operand)
+    for name, mode, K, sweep in (("step", "exact", 2, False),
+                                 ("stale", "commavoid", 4, False),
+                                 ("sweep", "exact", 2, True)):
         dist = DistConfig(mode=mode, k_chunk=K)
         fn = functools.partial(_shard_body, cfg=cfg, dist=dist,
                                n_steps=K, L_total=L)
+        in_specs = (P(dist.ens_axes, dist.ring_axis), P(dist.ens_axes),
+                    P(dist.ens_axes), P(), P(), P())
+        shapes = [jax.ShapeDtypeStruct((B, L), jnp.float32),
+                  jax.ShapeDtypeStruct((B,), jnp.float32),
+                  jax.ShapeDtypeStruct((B,), jnp.float32),
+                  jax.ShapeDtypeStruct((), jnp.uint32),
+                  jax.ShapeDtypeStruct((), jnp.int32),
+                  jax.ShapeDtypeStruct((), jnp.int32)]
+        if sweep:
+            # the Δ column shards over the ensemble axes like the tau rows
+            in_specs += (P(dist.ens_axes),)
+            shapes.append(jax.ShapeDtypeStruct((B,), jnp.float32))
         shard_fn = shard_map(
             fn, mesh=mesh,
-            in_specs=(P(dist.ens_axes, dist.ring_axis), P(), P()),
+            in_specs=in_specs,
             out_specs=(P(dist.ens_axes, dist.ring_axis), P(dist.ens_axes),
-                       (P(None, dist.ens_axes),) * 3),
+                       P(dist.ens_axes),
+                       (P(None, dist.ens_axes),) * len(STAT_KEYS)),
             check_rep=False)
-        args = (jnp.zeros((B, L), jnp.float32), jnp.uint32(0), jnp.int32(0))
+        args = [jnp.zeros(s.shape, s.dtype) for s in shapes]
+        if sweep:
+            args[-1] = jnp.full((B,), DEFAULT_DELTA, jnp.float32)
         g = _trace(shard_fn, *args)
         hlo = None
         try:
-            hlo = jax.jit(shard_fn).lower(
-                jax.ShapeDtypeStruct((B, L), jnp.float32),
-                jax.ShapeDtypeStruct((), jnp.uint32),
-                jax.ShapeDtypeStruct((), jnp.int32),
-            ).as_text(dialect="hlo")
+            hlo = jax.jit(shard_fn).lower(*shapes).as_text(dialect="hlo")
         except Exception:  # lowering is best-effort; jaxpr rules still run
             pass
         widths = {L, L_l, L_l + 2}
@@ -170,13 +180,9 @@ def _sharded_probes():
             widths |= {L_l + 2 * K, L_l + 2 * K + 2}
         yield Probe(name, "sharded", g, tau_in=0, tau_out=0,
                     ring_widths=frozenset(widths), L_ring=L,
-                    delta=cfg.delta, delta_input=None,
+                    delta=0.0 if sweep else cfg.delta,
+                    delta_input=6 if sweep else None,
                     shard_L={"model": L_l}, hlo=hlo)
-
-    try:
-        check_sweep_support("sharded")
-    except UnsupportedSweepError as e:
-        yield ProbeSkip("sweep", str(e))
 
 
 def iter_probes(backend: str):

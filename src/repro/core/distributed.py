@@ -20,6 +20,15 @@ the ring of L PEs shards over the ``model`` axis.  Statistics are
 accumulated shard-locally per step and combined with a single batched
 all-reduce per chunk — the measurement-phase pattern whose scalability the
 Δ-window guarantees (the paper's central point).
+
+**Window sweeps** ride the same layout: the per-row Δ column of a batched
+sweep (``PDESEngine.init_sweep``) shards over the ensemble axes exactly
+like the tau rows, so every shard sees its own rows' window widths and the
+guard ``tau <= delta + GVT`` applies row-wise with no extra communication.
+``trial_base`` offsets the counter event stream so that global row ``r``
+consumes stream index ``trial_base + r`` on every layout — which is what
+makes a sharded sweep bit-identical to the single-device serial per-Δ loop
+(tests/test_sharded_sweep.py).
 """
 from __future__ import annotations
 
@@ -33,7 +42,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..compat import axis_size, pcast_varying, shard_map
+from ..compat import axis_size, shard_map
 from .events import counter_bits_block
 from .horizon import PDESConfig, decode_words, conservative_update
 
@@ -59,28 +68,41 @@ class DistConfig:
 # ---------------------------------------------------------------------------
 
 
-def _update_haloed(tau_h, bits, gvt, cfg: PDESConfig):
+def _update_haloed(tau_h, bits, gvt, cfg: PDESConfig, delta=None):
     """One step on a haloed strip: tau_h (B, W + 2) -> (tau_next (B, W), update).
 
     Thin adapter over the shared update core in ``horizon`` (same code path
     as the reference scan and the Pallas kernels, so parity is structural).
+    ``delta=None`` applies the static ``cfg.delta``; a ``(B, 1)`` array is
+    the per-row window column of a batched sweep.
     """
     tau = tau_h[:, 1:-1]
     is_left, is_right, eta = decode_words(
         bits[..., 0], bits[..., 1], cfg.n_v, tau_h.dtype)
     return conservative_update(
         tau, tau_h[:, :-2], tau_h[:, 2:], is_left, is_right, eta, gvt,
-        delta=cfg.delta, rd_mode=cfg.rd_mode, border_both=cfg.border_both)
+        delta=cfg.delta if delta is None else delta,
+        rd_mode=cfg.rd_mode, border_both=cfg.border_both)
 
 
 def _local_stats(tau, update, dtype):
-    """Shard-local partial sums; additive across ring shards (except min)."""
+    """Shard-local partial reductions; additive across ring shards except
+    ``min``/``max``, which combine with ``pmin``/``pmax``."""
     return (
         jnp.sum(update.astype(dtype), axis=-1),     # ucount
         jnp.sum(tau, axis=-1),                      # sum
         jnp.sum(tau * tau, axis=-1),                # sumsq
         jnp.min(tau, axis=-1),                      # min (combine with pmin)
+        jnp.max(tau, axis=-1),                      # max (combine with pmax)
     )
+
+
+#: Keys of the per-step stats dict every sharded runner returns, in the
+#: order ``_shard_body`` emits them.  ``wa`` is absent by design: the
+#: absolute width needs the ring mean *before* the deviation reduction —
+#: a second all-reduce per step that the one-collective-per-chunk layout
+#: deliberately avoids (the engine reports it as NaN on this backend).
+STAT_KEYS = ("u", "w2", "gvt", "mean_tau", "max_dev", "min_dev")
 
 
 # ---------------------------------------------------------------------------
@@ -95,26 +117,38 @@ def _multi_axis_index(axes: Sequence[str]):
     return idx
 
 
-def _shard_body(tau0, seed, step_base, *, cfg: PDESConfig, dist: DistConfig,
+def _shard_body(tau0, off0, comp0, seed, step_base, trial_base,
+                delta_col=None, *, cfg: PDESConfig, dist: DistConfig,
                 n_steps: int, L_total: int):
     """Runs inside shard_map.  tau0: (B_l, L_l) local shard.
 
-    ``step_base`` offsets the counter event stream so a run can continue an
-    earlier trajectory (the engine passes the carried ``SimState.step``).
+    ``off0``/``comp0`` are the carried Kahan rebasing offset (sharded like
+    the trial rows) so a continued run accumulates on the exact same
+    summation schedule as the single-device driver — trajectories *and*
+    offsets stay bitwise comparable.  ``step_base`` offsets the counter
+    event stream in time (the engine passes the carried ``SimState.step``);
+    ``trial_base`` offsets it along the ensemble so row 0 of this run
+    consumes global stream index ``trial_base``.  ``delta_col`` is either
+    None (static ``cfg.delta`` window) or the local ``(B_l,)`` slice of the
+    per-row window widths of a batched sweep.
     """
     dtype = tau0.dtype
     ring = dist.ring_axis
     ring_n = axis_size(ring)
     ring_i = lax.axis_index(ring)
     B_l, L_l = tau0.shape
-    b0 = _multi_axis_index(dist.ens_axes) * B_l
+    b0 = trial_base + _multi_axis_index(dist.ens_axes) * B_l
     l0 = ring_i * L_l
     K = dist.k_chunk
     n_chunks = -(-n_steps // K)  # stats trimmed to n_steps by caller
     fwd = [(i, (i + 1) % ring_n) for i in range(ring_n)]   # receive from left
     bwd = [(i, (i - 1) % ring_n) for i in range(ring_n)]   # receive from right
 
-    finite_window = not math.isinf(cfg.delta)
+    sweep = delta_col is not None
+    delta = delta_col[:, None] if sweep else None
+    # a sweep's Δ column may mix finite and inf rows, so the window base is
+    # always needed; inf rows still satisfy ``tau <= inf + gvt`` identically.
+    finite_window = sweep or not math.isinf(cfg.delta)
 
     def exact_chunk(carry, c):
         tau, off, comp = carry
@@ -129,7 +163,7 @@ def _shard_body(tau0, seed, step_base, *, cfg: PDESConfig, dist: DistConfig,
                 gvt = lax.pmin(jnp.min(tau, axis=-1, keepdims=True), ring)
             else:
                 gvt = jnp.zeros((B_l, 1), dtype)  # unused
-            tau, update = _update_haloed(tau_h, bits, gvt, cfg)
+            tau, update = _update_haloed(tau_h, bits, gvt, cfg, delta)
             return tau, _local_stats(tau, update, dtype)
 
         tau, parts = lax.scan(one, tau, jnp.arange(K, dtype=jnp.int32))
@@ -158,7 +192,7 @@ def _shard_body(tau0, seed, step_base, *, cfg: PDESConfig, dist: DistConfig,
             # interior [K, K + L_l) stays exact for all s < K (DESIGN.md B4).
             tau_pad = jnp.concatenate(
                 [tau_e[:, :1], tau_e, tau_e[:, -1:]], axis=1)
-            nxt, update = _update_haloed(tau_pad, bits, gvt, cfg)
+            nxt, update = _update_haloed(tau_pad, bits, gvt, cfg, delta)
             stats = _local_stats(nxt[:, K:K + L_l], update[:, K:K + L_l], dtype)
             return nxt, stats
 
@@ -166,31 +200,85 @@ def _shard_body(tau0, seed, step_base, *, cfg: PDESConfig, dist: DistConfig,
         return _finish_chunk(tau_e[:, K:K + L_l], off, comp, parts)
 
     def _finish_chunk(tau, off, comp, parts):
-        ucount, ssum, ssq, smin = parts               # each (K, B_l)
+        ucount, ssum, ssq, smin, smax = parts         # each (K, B_l)
         # one batched all-reduce for the whole chunk's statistics
         tot = lax.psum(jnp.stack([ucount, ssum, ssq], axis=0), ring)
         gmin = lax.pmin(smin, ring)
+        gmax = lax.pmax(smax, ring)
         u = tot[0] / L_total
         mean = tot[1] / L_total
         w2 = tot[2] / L_total - mean * mean
         gvt_abs = gmin + off[None, :]
+        mean_abs = mean + off[None, :]
         # rebase once per chunk (fp32 hygiene)
         shift = lax.pmin(jnp.min(tau, axis=-1), ring)
         tau = tau - shift[:, None]
         y = shift - comp
         t = off + y
         comp = (t - off) - y
-        return (tau, t, comp), (u, w2, gvt_abs)
+        return (tau, t, comp), (u, w2, gvt_abs, mean_abs, gmax - mean,
+                                mean - gmin)
 
     chunk = exact_chunk if dist.mode == "exact" else commavoid_chunk
-    # carry starts replicated but becomes ensemble-varying after chunk 1;
-    # mark it varying up front so scan's carry types match (no-op — paired
-    # with check_rep=False — on JAX versions without varying types).
-    z = pcast_varying(jnp.zeros((B_l,), dtype), dist.ens_axes)
-    (tau, off, comp), (u, w2, gvt) = lax.scan(
-        chunk, (tau0, z, z), jnp.arange(n_chunks, dtype=jnp.int32))
-    stats = tuple(x.reshape(n_chunks * K, B_l) for x in (u, w2, gvt))
-    return tau, off, stats
+    (tau, off, comp), stats = lax.scan(
+        chunk, (tau0, off0, comp0), jnp.arange(n_chunks, dtype=jnp.int32))
+    stats = tuple(x.reshape(n_chunks * K, B_l) for x in stats)
+    return tau, off, comp, stats
+
+
+def _sharded_call(cfg: PDESConfig, mesh: Mesh, dist: DistConfig,
+                  n_steps: int, sweep: bool):
+    """shard_map-wrapped ``_shard_body`` with specs matching its operands."""
+    fn = functools.partial(
+        _shard_body, cfg=cfg, dist=dist, n_steps=n_steps, L_total=cfg.L)
+    ens, ring = dist.ens_axes, dist.ring_axis
+    in_specs = (P(ens, ring), P(ens), P(ens), P(), P(), P())
+    if sweep:
+        in_specs += (P(ens),)
+    return shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(P(ens, ring), P(ens), P(ens),
+                   (P(None, ens),) * len(STAT_KEYS)),
+        check_rep=False,
+    )
+
+
+def run_sharded_state(
+    cfg: PDESConfig,
+    mesh: Mesh,
+    *,
+    n_steps: int,
+    seed: int = 0,
+    dist: DistConfig = DistConfig(),
+    tau0,
+    off0,
+    comp0,
+    step_base=0,
+    deltas=None,
+    trial_base=0,
+):
+    """Advance a carried state; returns (tau, offset, comp, stats dict).
+
+    The state-threading entry point the engine uses: ``tau0`` is the rebased
+    local-time array, ``off0``/``comp0`` the Kahan offset pair, all sharded
+    like the trial rows.  ``deltas`` (optional ``(B,)``) is the per-row
+    window column of a batched sweep and ``trial_base`` the counter-stream
+    index of row 0 — together they make a sharded sweep consume exactly the
+    stream slices the single-device serial loop assigns to the same rows.
+    Stats keys are :data:`STAT_KEYS`; ``gvt``/``mean_tau`` are absolute
+    (offset included).
+    """
+    sweep = deltas is not None
+    shard_fn = _sharded_call(cfg, mesh, dist, n_steps, sweep)
+    args = [tau0, off0, comp0, jnp.uint32(seed), jnp.int32(step_base),
+            jnp.int32(trial_base)]
+    if sweep:
+        args.append(jnp.asarray(deltas, tau0.dtype))
+    tau, off, comp, stats = jax.jit(shard_fn)(*args)
+    return tau, off, comp, {
+        k: v[:n_steps] for k, v in zip(STAT_KEYS, stats)}
 
 
 def run_sharded(
@@ -204,28 +292,26 @@ def run_sharded(
     dtype=jnp.float32,
     tau0=None,
     step_base=0,
+    deltas=None,
+    trial_base=0,
 ):
     """Run the sharded PDES; returns (tau_abs (B, L), stats dict (n_steps, B)).
 
     ``n_trials`` must divide the ensemble mesh extent product and ``cfg.L``
-    the ring extent.  ``tau0``/``step_base`` let the engine continue an
-    existing trajectory (rebased local times + carried step counter).
+    the ring extent.  ``tau0``/``step_base`` let a caller continue an
+    existing trajectory (rebased local times + carried step counter);
+    ``deltas``/``trial_base`` run a batched window sweep (see
+    :func:`run_sharded_state`).  The engine threads the Kahan offset through
+    :func:`run_sharded_state` instead, which avoids this wrapper's final
+    ``tau + offset`` round trip.
     """
-    fn = functools.partial(
-        _shard_body, cfg=cfg, dist=dist, n_steps=n_steps, L_total=cfg.L)
-    shard_fn = shard_map(
-        fn,
-        mesh=mesh,
-        in_specs=(P(dist.ens_axes, dist.ring_axis), P(), P()),
-        out_specs=(P(dist.ens_axes, dist.ring_axis), P(dist.ens_axes),
-                   (P(None, dist.ens_axes),) * 3),
-        check_rep=False,
-    )
     if tau0 is None:
         tau0 = jnp.zeros((n_trials, cfg.L), dtype=dtype)
-    tau, off, (u, w2, gvt) = jax.jit(shard_fn)(
-        tau0, jnp.uint32(seed), jnp.int32(step_base))
-    stats = {"u": u[:n_steps], "w2": w2[:n_steps], "gvt": gvt[:n_steps]}
+    z = jnp.zeros((tau0.shape[0],), tau0.dtype)
+    tau, off, _, stats = run_sharded_state(
+        cfg, mesh, n_steps=n_steps, seed=seed, dist=dist,
+        tau0=tau0, off0=z, comp0=z, step_base=step_base,
+        deltas=deltas, trial_base=trial_base)
     return tau + off[:, None], stats
 
 
@@ -237,21 +323,20 @@ def lower_sharded(
     n_steps: int,
     dist: DistConfig = DistConfig(),
     dtype=jnp.float32,
+    sweep: bool = False,
 ):
     """Lower (no execution) for the multi-pod dry-run / roofline of the core."""
-    fn = functools.partial(
-        _shard_body, cfg=cfg, dist=dist, n_steps=n_steps, L_total=cfg.L)
-    shard_fn = shard_map(
-        fn,
-        mesh=mesh,
-        in_specs=(P(dist.ens_axes, dist.ring_axis), P(), P()),
-        out_specs=(P(dist.ens_axes, dist.ring_axis), P(dist.ens_axes),
-                   (P(None, dist.ens_axes),) * 3),
-        check_rep=False,
-    )
-    tau0 = jax.ShapeDtypeStruct((n_trials, cfg.L), dtype)
-    return jax.jit(shard_fn).lower(tau0, jax.ShapeDtypeStruct((), jnp.uint32),
-                                   jax.ShapeDtypeStruct((), jnp.int32))
+    shard_fn = _sharded_call(cfg, mesh, dist, n_steps, sweep)
+    B = n_trials
+    args = [jax.ShapeDtypeStruct((B, cfg.L), dtype),
+            jax.ShapeDtypeStruct((B,), dtype),
+            jax.ShapeDtypeStruct((B,), dtype),
+            jax.ShapeDtypeStruct((), jnp.uint32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32)]
+    if sweep:
+        args.append(jax.ShapeDtypeStruct((B,), dtype))
+    return jax.jit(shard_fn).lower(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -267,11 +352,15 @@ def run_reference(
     seed: int = 0,
     stale_every: int | None = None,
     dtype=jnp.float32,
+    deltas=None,
+    trial_base=0,
 ):
     """Unsharded oracle for run_sharded (same counter-based event stream).
 
     ``stale_every=None`` reproduces mode="exact"; ``stale_every=K`` reproduces
     mode="commavoid" with k_chunk=K (window base refreshed every K steps).
+    ``deltas``/``trial_base`` mirror the sweep operands of
+    :func:`run_sharded_state` (per-row window column, counter-stream base).
 
     Returns (tau_abs (B, L), stats dict (n_steps, B)) — bitwise comparable to
     run_sharded up to reduction ordering (min/sum over shards vs. full axis).
@@ -279,23 +368,27 @@ def run_reference(
     B, L = n_trials, cfg.L
     tau = jnp.zeros((B, L), dtype=dtype)
     K = stale_every or 1
+    delta = None if deltas is None else jnp.asarray(deltas, dtype)[:, None]
+    b0 = jnp.int32(trial_base)
 
-    def one_step(carry, s):
+    def _one_step(carry, s):
         tau, gvt_stale = carry
-        bits = counter_bits_block(jnp.uint32(seed), s, jnp.int32(0), jnp.int32(0), B, L)
+        bits = counter_bits_block(jnp.uint32(seed), s, b0, jnp.int32(0), B, L)
         tau_h = jnp.concatenate([tau[:, -1:], tau, tau[:, :1]], axis=1)
         if stale_every is None:
             gvt = jnp.min(tau, axis=-1, keepdims=True)
         else:
             refresh = (s % K) == 0
             gvt = jnp.where(refresh, jnp.min(tau, axis=-1, keepdims=True), gvt_stale)
-        tau, update = _update_haloed(tau_h, bits, gvt, cfg)
+        tau, update = _update_haloed(tau_h, bits, gvt, cfg, delta)
         u = jnp.mean(update.astype(dtype), axis=-1)
         mean = jnp.mean(tau, axis=-1)
         w2 = jnp.mean(tau * tau, axis=-1) - mean * mean
-        return (tau, gvt), (u, w2, jnp.min(tau, axis=-1))
+        gmin = jnp.min(tau, axis=-1)
+        stats = (u, w2, gmin, mean, jnp.max(tau, axis=-1) - mean, mean - gmin)
+        return (tau, gvt), stats
 
     init = (tau, jnp.zeros((B, 1), dtype))
-    (tau, _), (u, w2, gvt) = lax.scan(
-        one_step, init, jnp.arange(n_steps, dtype=jnp.int32))
-    return tau, {"u": u, "w2": w2, "gvt": gvt}
+    (tau, _), stats = lax.scan(
+        _one_step, init, jnp.arange(n_steps, dtype=jnp.int32))
+    return tau, dict(zip(STAT_KEYS, stats))

@@ -32,10 +32,12 @@ Backend matrix::
   lane-wise min in VMEM, hence exact-window only.
 * ``sharded`` maps ``window="exact"``/``"stale"`` onto the ``exact``/
   ``commavoid`` modes of ``core.distributed`` (per-step vs per-chunk halo
-  exchange + GVT all-reduce).  ``wa``/``mean_tau``/``max_dev``/``min_dev``
-  are returned as NaN on this backend (they need reductions the sharded
-  stats pipeline does not ship); run-level parity with ``reference`` is
-  covered by tests/test_distributed_pdes.py.
+  exchange + GVT all-reduce).  ``wa`` is returned as NaN on this backend:
+  the absolute width needs the global ring mean *before* the deviation
+  reduction — a second all-reduce per step that the one-collective-per-chunk
+  layout deliberately avoids.  All other StepStats fields are computed from
+  shard-local partial reductions; run-level parity with ``reference`` is
+  covered by tests/test_distributed_pdes.py and tests/test_sharded_sweep.py.
 
 State is the same ``SimState`` as ``horizon``: rebased ``tau`` (min == 0
 after every chunk), Kahan-compensated offset, step counter.  All backends
@@ -46,9 +48,13 @@ trajectories comparable bit-for-bit.
 window sweep is laid out on the ensemble axis — ``B = n_windows * replicas``
 rows with a per-row Δ column fed to the backends as a *batched operand*
 (array window rule in the reference scan, window base folding in the
-one-step kernel, a ``(B, 1)`` VMEM column in the multistep kernel).  One
+one-step kernel, a ``(B, 1)`` VMEM column in the multistep kernel, and an
+ensemble-sharded ``(B,)`` column on the ``sharded`` backend — each shard
+sees exactly its own rows' window widths, no extra communication).  One
 device pass advances every (Δ, replica) trajectory; ``repro.experiments``
-builds the paper's full (L, N_V, Δ) studies on top of this entry point.
+builds the paper's full (L, N_V, Δ) studies on top of this entry point,
+and ``experiments.sweep.plan_mesh_sweep`` packs ragged Δ grids onto the
+mesh ensemble axes.
 
 Example::
 
@@ -76,30 +82,6 @@ from .horizon import PDESConfig, SimState, StepStats
 
 BACKENDS = ("reference", "pallas", "pallas_multistep", "sharded")
 WINDOWS = ("exact", "stale")
-
-
-class UnsupportedSweepError(NotImplementedError):
-    """A window sweep (``deltas=`` / ``trial_base``) hit a backend that
-    cannot run it.  Subclasses ``NotImplementedError`` so existing callers
-    that catch the generic error keep working; structured so tools (e.g. the
-    ``repro.analysis`` backend iterator) can skip-with-reason instead of
-    crashing."""
-
-    def __init__(self, backend: str = "sharded", msg: str | None = None):
-        self.backend = backend
-        super().__init__(msg or (
-            f"backend {backend!r} does not support window sweeps "
-            "(deltas=/trial_base): multi-device sweep sharding is an open "
-            "ROADMAP item ('multi-device window-sweep sharding'). Run the "
-            "sweep on a single-device backend (reference / pallas / "
-            "pallas_multistep), or partition the Δ grid across separate "
-            "sharded runs."))
-
-
-def check_sweep_support(backend: str) -> None:
-    """Raise :class:`UnsupportedSweepError` if ``backend`` can't run sweeps."""
-    if backend == "sharded":
-        raise UnsupportedSweepError(backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -385,43 +367,41 @@ class PDESEngine:
         if n_steps < 1:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
         seed = jnp.uint32(seed)
-        if self.ecfg.backend == "sharded":
-            if deltas is not None or trial_base:
-                check_sweep_support(self.ecfg.backend)
-            return self._run_sharded(state, seed, n_steps, mode)
         if deltas is not None:
             deltas = jnp.asarray(deltas, state.tau.dtype)
             if deltas.shape != (state.tau.shape[0],):
                 raise ValueError(
                     f"deltas must have shape ({state.tau.shape[0]},) — one "
                     f"window width per ensemble row — got {deltas.shape}")
+        if self.ecfg.backend == "sharded":
+            return self._run_sharded(state, seed, n_steps, mode,
+                                     deltas=deltas, trial_base=trial_base)
         return _run_single(state, seed, self.cfg, self.ecfg, n_steps, mode,
                            deltas, trial_base)
 
-    def _run_sharded(self, state, seed, n_steps, mode):
+    def _run_sharded(self, state, seed, n_steps, mode, deltas=None,
+                     trial_base=0):
         from . import distributed as D
         K = self.dist.k_chunk
         if n_steps % K:
             raise ValueError(
                 f"sharded backend advances whole chunks: n_steps={n_steps} "
                 f"must be a multiple of k_chunk={K}")
-        B = state.tau.shape[0]
-        tau_abs, st = D.run_sharded(
-            self.cfg, self.mesh, n_trials=B, n_steps=n_steps, seed=seed,
-            dist=self.dist, dtype=state.tau.dtype, tau0=state.tau,
-            step_base=state.step)
-        shift = jnp.min(tau_abs, axis=-1)
-        tau = tau_abs - shift[:, None]
-        off, comp = horizon._kahan_add(
-            state.offset, state.offset_comp, shift)
+        tau, off, comp, st = D.run_sharded_state(
+            self.cfg, self.mesh, n_steps=n_steps, seed=seed,
+            dist=self.dist, tau0=state.tau, off0=state.offset,
+            comp0=state.offset_comp, step_base=state.step,
+            deltas=deltas, trial_base=trial_base)
         out_state = SimState(tau, off, comp, state.step + n_steps)
         if mode == "burn":
             return out_state, None
+        # ``gvt``/``mean_tau`` come back absolute (the runtime adds the
+        # carried offset chunk-by-chunk, same schedule as _run_single).
         nan = jnp.full(st["u"].shape, jnp.nan, state.tau.dtype)
         stats = StepStats(
-            utilization=st["u"], w2=st["w2"], wa=nan,
-            gvt=st["gvt"] + state.offset[None, :],
-            mean_tau=nan, max_dev=nan, min_dev=nan)
+            utilization=st["u"], w2=st["w2"], wa=nan, gvt=st["gvt"],
+            mean_tau=st["mean_tau"], max_dev=st["max_dev"],
+            min_dev=st["min_dev"])
         if mode == "mean":
             stats = jax.tree.map(lambda a: jnp.mean(a, axis=0), stats)
         return out_state, stats

@@ -123,9 +123,10 @@ def steady_state_sweep(
     ``measurement.progress_rate`` rather than the endpoint quotient.
 
     ``engine_opts`` accepts the engine options a batched sweep supports —
-    ``window`` and ``k_fuse``.  ``steady_state``'s other engine options
-    (``mesh``/``dist``: sweeps are single-device for now, see ROADMAP;
-    ``block_b``/``interpret``: not spec-level) are rejected explicitly
+    ``window``, ``k_fuse``, and (for ``backend="sharded"``) ``mesh`` /
+    ``dist``, which route to ``experiments.sweep.run_window_sweep``'s mesh
+    execution path.  ``steady_state``'s remaining engine options
+    (``block_b``/``interpret``: not spec-level) are rejected explicitly
     rather than silently dropped.
     """
     from ..experiments.sweep import WindowSweep, run_window_sweep
@@ -136,17 +137,19 @@ def steady_state_sweep(
     if measure_steps is None:
         measure_steps = max(200, burn_in_steps // 4)
     opts = dict(engine_opts or {})
+    mesh = opts.pop("mesh", None)
+    dist = opts.pop("dist", None)
     unsupported = sorted(set(opts) - {"window", "k_fuse"})
     if unsupported:
         raise ValueError(
-            f"steady_state_sweep supports engine_opts 'window' and 'k_fuse' "
-            f"only (batched sweeps are single-device); got {unsupported}")
+            f"steady_state_sweep supports engine_opts 'window', 'k_fuse', "
+            f"'mesh' and 'dist' only; got {unsupported}")
     spec = WindowSweep(
         Ls=(cfg.L,), n_vs=(cfg.n_v,), deltas=tuple(float(d) for d in deltas),
         replicas=n_trials, n_steps=measure_steps, burn_in=burn_in_steps,
         backend=backend, rd_mode=cfg.rd_mode,
         border_both=cfg.border_both, steady_frac=1.0, seed=seed, **opts)
-    result = run_window_sweep(spec)
+    result = run_window_sweep(spec, mesh=mesh, dist=dist)
     out = []
     for d in deltas:
         (rec,) = result.select(delta=float(d))

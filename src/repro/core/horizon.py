@@ -340,10 +340,10 @@ def run(state: SimState, key: jax.Array, cfg: PDESConfig, n_steps: int):
     Returns (final_state, StepStats with leading time axis (n_steps, B)).
     """
 
-    def body(st, _):
+    def _body(st, _):
         return _one_step(st, key, cfg)
 
-    return jax.lax.scan(body, state, None, length=n_steps)
+    return jax.lax.scan(_body, state, None, length=n_steps)
 
 
 @partial(jax.jit, static_argnames=("cfg", "n_steps"))
@@ -353,7 +353,7 @@ def run_mean(state: SimState, key: jax.Array, cfg: PDESConfig, n_steps: int):
     Used for steady-state estimation after burn-in: O(1) memory in n_steps.
     """
 
-    def body2(carry, _):
+    def _body(carry, _):
         st, acc = carry
         st, stats = _one_step(st, key, cfg)
         acc = jax.tree.map(lambda a, s: a + s, acc, stats)
@@ -361,7 +361,7 @@ def run_mean(state: SimState, key: jax.Array, cfg: PDESConfig, n_steps: int):
 
     zeros = StepStats(*(jnp.zeros((state.tau.shape[0],), state.tau.dtype)
                         for _ in StepStats._fields))
-    (state, acc), _ = jax.lax.scan(body2, (state, zeros), None, length=n_steps)
+    (state, acc), _ = jax.lax.scan(_body, (state, zeros), None, length=n_steps)
     mean_stats = jax.tree.map(lambda a: a / n_steps, acc)
     return state, mean_stats
 
@@ -370,9 +370,9 @@ def run_mean(state: SimState, key: jax.Array, cfg: PDESConfig, n_steps: int):
 def burn_in(state: SimState, key: jax.Array, cfg: PDESConfig, n_steps: int):
     """Advance without recording (for reaching the steady state)."""
 
-    def body(st, _):
+    def _body(st, _):
         st, _ = _one_step(st, key, cfg)
         return st, None
 
-    state, _ = jax.lax.scan(body, state, None, length=n_steps)
+    state, _ = jax.lax.scan(_body, state, None, length=n_steps)
     return state

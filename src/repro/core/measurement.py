@@ -30,6 +30,7 @@ class GroupStats(NamedTuple):
 
 
 def group_decomposition(tau: jax.Array) -> GroupStats:
+    """Slow/fast group populations and widths of a horizon, Eqs. (15)-(16)."""
     dtype = tau.dtype
     L = tau.shape[-1]
     mean = jnp.mean(tau, axis=-1, keepdims=True)
@@ -151,25 +152,25 @@ def sweep_reduce(stats, n_windows: int, replicas: int, *,
                          f"({n_windows}*{replicas})")
     t0 = steady_start(T, steady_frac)
 
-    def per_window(x):                       # (T, B) -> (n_windows, replicas)
+    def _per_window(x):                      # (T, B) -> (n_windows, replicas)
         return np.asarray(x)[t0:].mean(axis=0).reshape(n_windows, replicas)
 
-    def mean_err(x):
+    def _mean_err(x):
         m = x.mean(axis=1)
         e = (x.std(axis=1, ddof=1) / np.sqrt(replicas) if replicas > 1
              else np.zeros_like(m))
         return m, e
 
-    u_w, u_e = mean_err(per_window(stats.utilization))
-    w2_w, w2_e = mean_err(per_window(stats.w2))
+    u_w, u_e = _mean_err(_per_window(stats.utilization))
+    w2_w, w2_e = _mean_err(_per_window(stats.w2))
     rate = np.asarray(progress_rate(jnp.asarray(stats.gvt), t0=t0))
-    r_w, r_e = mean_err(rate.reshape(n_windows, replicas))
-    spread = per_window(np.asarray(stats.max_dev) + np.asarray(stats.min_dev))
+    r_w, r_e = _mean_err(rate.reshape(n_windows, replicas))
+    spread = _per_window(np.asarray(stats.max_dev) + np.asarray(stats.min_dev))
     return {
         "u": u_w, "u_err": u_e,
         "w2": w2_w, "w2_err": w2_e,
-        "w": np.sqrt(per_window(stats.w2)).mean(axis=1),
-        "wa": mean_err(per_window(stats.wa))[0],
+        "w": np.sqrt(_per_window(stats.w2)).mean(axis=1),
+        "wa": _mean_err(_per_window(stats.wa))[0],
         "spread": spread.mean(axis=1),
         "rate": r_w, "rate_err": r_e,
     }

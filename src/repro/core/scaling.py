@@ -20,6 +20,8 @@ import numpy as np
 
 @dataclasses.dataclass
 class Extrapolation:
+    """Result of an L -> inf fit: the limit, fit coefficients, residual."""
+
     u_inf: float
     coeffs: dict
     residual: float

@@ -14,9 +14,11 @@ from .optimal_window import (  # noqa: F401
     optimal_windows,
 )
 from .sweep import (  # noqa: F401
+    MeshSweepPlan,
     SweepRecord,
     SweepResult,
     WindowSweep,
+    plan_mesh_sweep,
     run_window_sweep,
     serial_window_sweep,
 )

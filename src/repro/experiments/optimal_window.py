@@ -52,6 +52,7 @@ class OptimalWindow:
     interior: bool                 # Δ* strictly inside the swept grid
 
     def as_dict(self) -> dict:
+        """JSON-ready dict (``inf`` spelled as the string ``"inf"``)."""
         d = dataclasses.asdict(self)
         d["deltas"] = ["inf" if math.isinf(x) else x for x in self.deltas]
         for k in ("deltas", "eff", "u", "w"):

@@ -17,6 +17,20 @@ window ``w`` of the batched run consumes the counter-stream slice
 ``trial_base = w * replicas``, so the two agree exactly, not statistically
 (tests/test_experiments.py); it is also the baseline the ``window_sweep``
 benchmark beats.
+
+**Multi-device sweeps**: pass ``mesh=`` (and optionally ``dist=``) with
+``backend="sharded"`` and the same Δ-on-the-ensemble-axis layout shards
+over the mesh — the per-row Δ column gets the identical ensemble-axis
+sharding as the tau rows, so every shard sees its own rows' window widths.
+``plan_mesh_sweep`` is the grid scheduler: it checks the ring divides the
+mesh ring axis, pads ragged Δ-batches up to a multiple of the ensemble
+extent (pad rows run unconstrained, ``Δ = inf``, and are sliced off before
+``measurement.sweep_reduce`` ever sees them), and rounds the burn-in up to
+a whole number of ``k_fuse`` chunks (the sharded runtime advances whole
+chunks only).  Because every row's counter stream depends only on its own
+global trial index, the sharded pass is *bit-identical* to the
+single-device serial loop — asserted on a multi-device CPU mesh in
+tests/test_sharded_sweep.py.
 """
 from __future__ import annotations
 
@@ -81,6 +95,7 @@ class WindowSweep:
 
     @property
     def n_windows(self) -> int:
+        """Number of Δ values in the grid (ensemble rows per replica)."""
         return len(self.deltas)
 
     @property
@@ -95,6 +110,97 @@ class WindowSweep:
         return max(
             default_burn_in(dataclasses.replace(cfg, delta=d))
             for d in self.deltas)
+
+
+def _round_up(n: int, k: int) -> int:
+    return -(-n // k) * k
+
+
+def _derive_dist(spec: WindowSweep):
+    """The DistConfig ``PDESEngine`` would derive for this spec (same rule)."""
+    from ..core.distributed import DistConfig
+    return DistConfig(mode="exact" if spec.window == "exact" else "commavoid",
+                      k_chunk=spec.k_fuse)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSweepPlan:
+    """How one (L, N_V) grid point of a sweep maps onto the device mesh.
+
+    Attributes:
+      L, n_v: the grid point.
+      trial_base: counter-stream index of row 0 — identical to the
+        single-device pass, so padding never shifts real rows' streams.
+      n_rows: real (Δ, replica) rows = ``spec.n_trajectories``.
+      n_pad: rows appended so ``n_rows + n_pad`` divides the ensemble
+        extent.  Pad rows run unconstrained (``Δ = inf``) on stream indices
+        past the real block and are sliced off before reduction.
+      ens_extent: product of the mesh ensemble axis sizes.
+      ring_extent: mesh ring axis size (must divide L).
+      burn_in: the grid point's burn-in, rounded *up* to whole chunks
+        (the sharded runtime advances whole ``k_chunk``-step chunks; the
+        rounding is the identity when the spec's burn-in already is one,
+        which is what the parity tests pass).
+    """
+
+    L: int
+    n_v: int
+    trial_base: int
+    n_rows: int
+    n_pad: int
+    ens_extent: int
+    ring_extent: int
+    burn_in: int
+
+    @property
+    def n_padded(self) -> int:
+        """Rows actually laid out on the mesh (``n_rows + n_pad``)."""
+        return self.n_rows + self.n_pad
+
+
+def plan_mesh_sweep(spec: WindowSweep, mesh, dist=None) -> tuple[MeshSweepPlan, ...]:
+    """Grid scheduler: pack the sweep's (L, N_V, Δ) points onto a mesh.
+
+    Validates the layout (ring axis divides every L, mesh has the
+    ``DistConfig`` axes, whole-chunk step counts) and returns one
+    :class:`MeshSweepPlan` per (L, N_V) grid point, in execution order.
+    Works on an ``AbstractMesh`` too — planning needs axis sizes only.
+    """
+    if dist is None:
+        dist = _derive_dist(spec)
+    missing = [a for a in (*dist.ens_axes, dist.ring_axis)
+               if a not in mesh.shape]
+    if missing:
+        raise ValueError(
+            f"mesh axes {tuple(mesh.shape)} lack the DistConfig axes "
+            f"{missing}")
+    ens = 1
+    for a in dist.ens_axes:
+        ens *= mesh.shape[a]
+    ring = mesh.shape[dist.ring_axis]
+    if spec.n_steps % dist.k_chunk:
+        raise ValueError(
+            f"sharded sweeps advance whole chunks: n_steps={spec.n_steps} "
+            f"must be a multiple of k_chunk={dist.k_chunk}")
+    plans = []
+    base = 0
+    for L in spec.Ls:
+        if int(L) % ring:
+            raise ValueError(
+                f"ring axis {dist.ring_axis!r} of extent {ring} does not "
+                f"divide L={L}")
+        for n_v in spec.n_vs:
+            cfg = PDESConfig(L=int(L), n_v=int(n_v), delta=math.inf,
+                             rd_mode=spec.rd_mode,
+                             border_both=spec.border_both)
+            B = spec.n_trajectories
+            plans.append(MeshSweepPlan(
+                L=int(L), n_v=int(n_v), trial_base=base, n_rows=B,
+                n_pad=_round_up(B, ens) - B, ens_extent=ens,
+                ring_extent=ring,
+                burn_in=_round_up(spec.burn_in_for(cfg), dist.k_chunk)))
+            base += B
+    return tuple(plans)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +221,7 @@ class SweepRecord:
     rate_err: float
 
     def as_dict(self) -> dict:
+        """JSON-ready dict of the record's scalar fields."""
         d = dataclasses.asdict(self)
         # JSON has no inf literal; the canonical on-disk spelling is "inf".
         if math.isinf(self.delta):
@@ -131,6 +238,7 @@ class SweepResult:
 
     def select(self, *, L: int | None = None, n_v: int | None = None,
                delta: float | None = None) -> list[SweepRecord]:
+        """Records matching every given coordinate (None = don't filter)."""
         out = []
         for r in self.records:
             if L is not None and r.L != L:
@@ -143,6 +251,7 @@ class SweepResult:
         return out
 
     def to_json(self, path: str | pathlib.Path) -> pathlib.Path:
+        """Write spec + records to ``path`` as JSON; returns the path."""
         path = pathlib.Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         spec = dataclasses.asdict(self.spec)
@@ -170,19 +279,37 @@ def _grid_point_records(spec: WindowSweep, cfg: PDESConfig,
     return out
 
 
-def _engine(spec: WindowSweep, cfg: PDESConfig) -> PDESEngine:
+def _engine(spec: WindowSweep, cfg: PDESConfig, mesh=None,
+            dist=None) -> PDESEngine:
     return PDESEngine(cfg, backend=spec.backend, window=spec.window,
-                      k_fuse=spec.k_fuse)
+                      k_fuse=spec.k_fuse, mesh=mesh, dist=dist)
 
 
-def run_window_sweep(spec: WindowSweep) -> SweepResult:
+def _check_mesh_args(spec: WindowSweep, mesh) -> None:
+    if spec.backend == "sharded" and mesh is None:
+        raise ValueError(
+            "backend='sharded' sweeps need a device mesh: pass mesh= "
+            "(and optionally dist=)")
+    if mesh is not None and spec.backend != "sharded":
+        raise ValueError(
+            f"mesh= is only meaningful for backend='sharded', "
+            f"got backend={spec.backend!r}")
+
+
+def run_window_sweep(spec: WindowSweep, *, mesh=None, dist=None) -> SweepResult:
     """Execute a sweep: one batched device pass per (L, N_V) grid point.
 
     Every Δ (and every replica) of a grid point advances in the same engine
     call — ``spec.n_trajectories`` rows per pass — then
     ``measurement.sweep_reduce`` collapses the batch to per-Δ steady-state
-    estimates.
+    estimates.  With ``backend="sharded"`` pass ``mesh=`` (and optionally
+    ``dist=``): the pass shards over the mesh per :func:`plan_mesh_sweep`,
+    with ragged Δ-batches padded to the ensemble extent and un-padded
+    before reduction.
     """
+    _check_mesh_args(spec, mesh)
+    if mesh is not None:
+        return _run_window_sweep_sharded(spec, mesh, dist)
     records = []
     grid_base = 0
     for L in spec.Ls:
@@ -206,15 +333,67 @@ def run_window_sweep(spec: WindowSweep) -> SweepResult:
     return SweepResult(spec=spec, records=tuple(records))
 
 
-def serial_window_sweep(spec: WindowSweep) -> SweepResult:
+def _run_window_sweep_sharded(spec: WindowSweep, mesh, dist) -> SweepResult:
+    """Mesh execution of :func:`run_window_sweep` (same records contract).
+
+    Pad rows (ragged Δ-batch -> ensemble-extent multiple) run with
+    ``Δ = inf`` on counter-stream indices past the grid point's real block;
+    they are sliced off the recorded stats *before*
+    ``measurement.sweep_reduce``, so the steady-state estimates are
+    computed from exactly the rows the single-device pass produces.
+    """
+    import jax
+    import jax.numpy as jnp
+    records = []
+    for plan in plan_mesh_sweep(spec, mesh, dist):
+        cfg = PDESConfig(L=plan.L, n_v=plan.n_v, delta=math.inf,
+                         rd_mode=spec.rd_mode, border_both=spec.border_both)
+        eng = _engine(spec, cfg, mesh=mesh, dist=dist)
+        state, drows = eng.init_sweep(spec.deltas, spec.replicas)
+        if plan.n_pad:
+            state = eng.init(plan.n_padded)
+            drows = jnp.concatenate(
+                [drows, jnp.full((plan.n_pad,), jnp.inf, drows.dtype)])
+        if plan.burn_in:
+            state = eng.burn_in(state, spec.seed, plan.burn_in, deltas=drows,
+                                trial_base=plan.trial_base)
+        _, stats = eng.run(state, spec.seed, spec.n_steps, deltas=drows,
+                           trial_base=plan.trial_base)
+        if plan.n_pad:
+            stats = jax.tree.map(lambda a: a[:, :plan.n_rows], stats)
+        red = measurement.sweep_reduce(
+            stats, spec.n_windows, spec.replicas,
+            steady_frac=spec.steady_frac)
+        records.extend(_grid_point_records(spec, cfg, red))
+    return SweepResult(spec=spec, records=tuple(records))
+
+
+def serial_window_sweep(spec: WindowSweep, *, mesh=None,
+                        dist=None) -> SweepResult:
     """The same study as a serial per-Δ engine loop (oracle + baseline).
 
     Window ``w`` runs with a static ``cfg.delta`` and
     ``trial_base = w * replicas``, i.e. on exactly the counter-stream rows
     the batched pass assigns it — trajectories are bit-identical to
     ``run_window_sweep``, at one engine call per Δ instead of one per grid
-    point.
+    point.  ``mesh=``/``dist=`` run each per-Δ call on the sharded backend
+    (``replicas`` must then divide the mesh ensemble extent) — the serial
+    baseline the ``window_sweep_sharded`` benchmark measures against.
     """
+    _check_mesh_args(spec, mesh)
+    burn_quantum = 1
+    if mesh is not None:
+        dcfg = dist if dist is not None else _derive_dist(spec)
+        ens = 1
+        for a in dcfg.ens_axes:
+            ens *= mesh.shape[a]
+        if spec.replicas % ens:
+            raise ValueError(
+                f"serial sharded sweeps run replicas={spec.replicas} rows "
+                f"per engine call; must be a multiple of the ensemble "
+                f"extent {ens}")
+        # match the batched mesh pass's whole-chunk burn-in rounding
+        burn_quantum = dcfg.k_chunk
     records = []
     grid_base = 0
     for L in spec.Ls:
@@ -226,8 +405,8 @@ def serial_window_sweep(spec: WindowSweep) -> SweepResult:
                                  rd_mode=spec.rd_mode,
                                  border_both=spec.border_both)
                 if burn is None:
-                    burn = spec.burn_in_for(cfg)
-                eng = _engine(spec, cfg)
+                    burn = _round_up(spec.burn_in_for(cfg), burn_quantum)
+                eng = _engine(spec, cfg, mesh=mesh, dist=dist)
                 state = eng.init(spec.replicas)
                 base = grid_base + w * spec.replicas
                 if burn:

@@ -59,10 +59,18 @@ def test_clean_tree_has_zero_findings(backend):
     assert sorted(set(rep.rules_run)) == sorted(ALL_RULES)
 
 
-def test_sharded_sweep_skipped_with_reason():
+def test_sharded_sweep_probe_runs_unskipped():
+    """Multi-device sweep sharding landed: every backend (sharded included)
+    yields a live sweep probe with a traced Δ-column operand, and nothing
+    is skipped-with-reason anymore."""
+    from repro.analysis.probes import iter_probes
     rep = analyze_backend("sharded")
-    assert "sweep" in rep.skipped
-    assert "ROADMAP" in rep.skipped["sweep"]
+    assert rep.skipped == {}
+    sweeps = [p for p in iter_probes("sharded") if p.name == "sweep"]
+    assert len(sweeps) == 1
+    (p,) = sweeps
+    assert p.delta_input is not None and p.delta == 0.0
+    assert p.shard_L == {"model": 8}
 
 
 # ---------------------------------------------------------------------------
@@ -122,18 +130,8 @@ def test_vmem_budget_is_configurable():
 
 
 # ---------------------------------------------------------------------------
-# structured sweep error (engine satellite) + CLI
+# CLI
 # ---------------------------------------------------------------------------
-
-
-def test_unsupported_sweep_error_is_structured():
-    from repro.core.engine import UnsupportedSweepError, check_sweep_support
-    with pytest.raises(UnsupportedSweepError) as ei:
-        check_sweep_support("sharded")
-    assert isinstance(ei.value, NotImplementedError)   # old except: clauses
-    assert ei.value.backend == "sharded"
-    assert "ROADMAP" in str(ei.value)
-    check_sweep_support("pallas_multistep")            # no raise
 
 
 def test_cli_json_roundtrip(tmp_path, capsys):

@@ -1,0 +1,101 @@
+"""Documentation layer: link integrity + content freshness.
+
+The CI docs job runs ``tools/check_docs.py`` directly; these tests run the
+same checker in-process (so `pytest` alone catches doc rot) and pin the
+facts the documents state to the code they describe — backend matrix,
+tier-1 command, bench names — so the docs can't silently drift from the
+tree.
+"""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_links_and_anchors_resolve(monkeypatch):
+    monkeypatch.chdir(ROOT)
+    assert check_docs.check(["README.md", "docs"]) == []
+
+
+def test_checker_catches_breakage(tmp_path):
+    (tmp_path / "a.md").write_text("# A\n[dead](missing.md)\n")
+    probs = check_docs.check([str(tmp_path)])
+    assert any("broken link" in p for p in probs)
+    (tmp_path / "a.md").write_text("# A\n[b](b.md#nope)\n")
+    (tmp_path / "b.md").write_text("# Real Heading\n")
+    probs = check_docs.check([str(tmp_path)])
+    assert any("broken anchor" in p for p in probs)
+    (tmp_path / "c.md").write_text("# C — linked by nobody\n")
+    probs = check_docs.check([str(tmp_path)])
+    assert any("orphan" in p and "c.md" in p for p in probs)
+
+
+def test_github_slug_convention():
+    assert check_docs.github_slug("The analysis linter") == \
+        "the-analysis-linter"
+    assert check_docs.github_slug("Install / `[test]` extras") == \
+        "install--test-extras"
+
+
+def test_readme_backend_matrix_is_current():
+    from repro.core.engine import BACKENDS
+    readme = (ROOT / "README.md").read_text()
+    for b in BACKENDS:
+        assert f"`{b}`" in readme, f"README backend matrix lacks {b!r}"
+
+
+def test_readme_states_the_tier1_command():
+    readme = (ROOT / "README.md").read_text()
+    assert "PYTHONPATH=src python -m pytest -x -q" in readme
+    roadmap = (ROOT / "ROADMAP.md").read_text()
+    m = re.search(r"\*\*Tier-1 verify:\*\* `([^`]+)`", roadmap)
+    assert m, "ROADMAP lost its tier-1 verify line"
+    # README quotes the same core command ROADMAP declares authoritative
+    assert "python -m pytest -x -q" in m.group(1)
+
+
+def test_readme_names_the_gated_benches():
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.run import BENCHES
+    readme = (ROOT / "README.md").read_text()
+    for name in ("kernel_fused", "window_sweep", "window_sweep_sharded",
+                 "pdes_comm"):
+        assert name in BENCHES
+        assert name in readme, f"README bench list lacks {name!r}"
+
+
+def test_architecture_names_every_core_module():
+    doc = (ROOT / "docs" / "architecture.md").read_text()
+    for mod in ("events", "horizon", "kernels", "engine", "distributed",
+                "experiments", "analysis"):
+        assert mod in doc
+    # the sweep dataflow section reflects the real entry points
+    for fn in ("init_sweep", "run_sharded_state", "plan_mesh_sweep",
+               "sweep_reduce", "serial_window_sweep"):
+        assert fn in doc, f"architecture.md sweep dataflow lacks {fn}"
+
+
+def test_paper_map_rows_point_at_real_files():
+    doc = (ROOT / "docs" / "paper_map.md").read_text()
+    for path in re.findall(r"`(tests/[\w./]+\.py)`", doc):
+        assert (ROOT / path).exists(), f"paper_map.md references {path}"
+    # benchmarks/run.py::name references must be registered benches
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.run import BENCHES
+    for name in re.findall(r"benchmarks/run\.py::(\w+)", doc):
+        for n in name.split("/"):
+            assert n in BENCHES, f"paper_map.md references bench {n!r}"
+
+
+def test_stale_sweep_docs_are_gone():
+    """PR guard: no doc/docstring still claims sharded sweeps are
+    unsupported or that the analysis sweep probe is skipped."""
+    engine_doc = (ROOT / "src/repro/core/engine.py").read_text()
+    assert "UnsupportedSweepError" not in engine_doc
+    assert "check_sweep_support" not in engine_doc
+    tests_readme = (ROOT / "tests" / "README.md").read_text()
+    assert "skipped-with-reason" not in tests_readme

@@ -1,0 +1,247 @@
+"""Multi-device window-sweep sharding: bit-identity and ragged padding.
+
+The expensive parity checks run in one subprocess with 8 fake CPU devices
+(the main pytest process must keep the default 1-device platform, same
+pattern as tests/test_distributed_pdes.py): a 2x4 mesh runs the batched
+sharded sweep and is compared row-block by row-block against the
+single-device serial per-Δ loop — ``array_equal``, not ``allclose``, on
+trajectories.  The in-process tests cover the mesh grid scheduler
+(``plan_mesh_sweep``) and its error paths on an AbstractMesh, which needs
+axis sizes only.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.distributed
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, math
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.compat import make_mesh
+    from repro.core import PDESConfig
+    from repro.core.engine import PDESEngine
+    from repro.experiments.sweep import (WindowSweep, plan_mesh_sweep,
+                                         run_window_sweep,
+                                         serial_window_sweep)
+
+    results = {}
+    mesh = make_mesh((2, 4), ("data", "model"))
+
+    # -- engine-level: batched sharded sweep vs single-device serial loop --
+    cfg = PDESConfig(L=32, n_v=4, delta=4.0)
+    e_sh = PDESEngine(cfg, backend="sharded", k_fuse=4, mesh=mesh)
+    e_1d = PDESEngine(cfg, backend="reference", k_fuse=4)
+    deltas = [1.0, 2.0, 4.0, math.inf]
+    R = 3
+    st0, drows = e_sh.init_sweep(deltas, replicas=R)
+    ss, sw = e_sh.run(st0, seed=5, n_steps=16, deltas=drows)
+    bitident = True
+    for w, d in enumerate(deltas):
+        s1 = e_1d.init(R)
+        s1, _ = e_1d.run(s1, seed=5, n_steps=16,
+                         deltas=jnp.full((R,), d, jnp.float32),
+                         trial_base=w * R)
+        blk = slice(w * R, (w + 1) * R)
+        bitident &= bool(np.array_equal(np.asarray(s1.tau),
+                                        np.asarray(ss.tau[blk])))
+        bitident &= bool(np.array_equal(np.asarray(s1.offset),
+                                        np.asarray(ss.offset[blk])))
+    results["engine_bit_identity"] = bitident
+
+    # stats contract: u/gvt exactly equal to the single-device batched pass
+    # (order-insensitive reductions), moment-derived fields allclose only
+    # (fp32 summation order differs across shard layouts), wa NaN.
+    st0, dr1 = e_1d.init_sweep(deltas, replicas=R)
+    _, sw1 = e_1d.run(st0, seed=5, n_steps=16, deltas=dr1)
+    results["u_exact"] = bool(np.array_equal(
+        np.asarray(sw.utilization), np.asarray(sw1.utilization)))
+    results["gvt_exact"] = bool(np.array_equal(
+        np.asarray(sw.gvt), np.asarray(sw1.gvt)))
+    results["w2_close"] = bool(np.allclose(
+        np.asarray(sw.w2), np.asarray(sw1.w2), rtol=1e-5, atol=1e-6))
+    results["moments_close"] = all(bool(np.allclose(
+        np.asarray(getattr(sw, f)), np.asarray(getattr(sw1, f)),
+        rtol=1e-5, atol=1e-5)) for f in ("mean_tau", "max_dev", "min_dev"))
+    results["wa_nan"] = bool(np.isnan(np.asarray(sw.wa)).all())
+
+    # -- experiments-level: records parity, divisible grid ----------------
+    spec = WindowSweep(Ls=(32,), n_vs=(4,), deltas=(1.0, 2.0, 4.0, math.inf),
+                       replicas=3, n_steps=16, burn_in=8, backend="sharded",
+                       k_fuse=4, seed=5)
+    res_sh = run_window_sweep(spec, mesh=mesh)
+    import dataclasses
+    res_1d = run_window_sweep(dataclasses.replace(spec, backend="reference"))
+    rec_ok = len(res_sh.records) == len(res_1d.records)
+    for a, b in zip(res_sh.records, res_1d.records):
+        rec_ok &= (a.L, a.n_v, a.delta) == (b.L, b.n_v, b.delta)
+        rec_ok &= a.u == b.u and a.u_err == b.u_err
+        rec_ok &= a.rate == b.rate and a.rate_err == b.rate_err
+        rec_ok &= bool(np.isclose(a.w2, b.w2, rtol=1e-4, atol=1e-6))
+        rec_ok &= math.isnan(a.wa) and not math.isnan(b.wa)
+    results["records_parity"] = bool(rec_ok)
+
+    # serial sharded loop (the benchmark baseline) gives the same records;
+    # its replicas must divide the ensemble extent (2), hence a new spec
+    spec_s = dataclasses.replace(spec, replicas=2)
+    res_sb = run_window_sweep(spec_s, mesh=mesh)
+    res_ser = serial_window_sweep(spec_s, mesh=mesh)
+    ser_ok = all(
+        a.u == b.u and a.rate == b.rate
+        and bool(np.isclose(a.w2, b.w2, rtol=1e-5, atol=1e-6))
+        for a, b in zip(res_sb.records, res_ser.records))
+    results["serial_sharded_parity"] = bool(ser_ok)
+
+    # -- ragged padding: 3 deltas x 1 replica = 3 rows on ens extent 2 ----
+    spec_r = WindowSweep(Ls=(16,), n_vs=(2,), deltas=(1.0, 4.0, math.inf),
+                         replicas=1, n_steps=8, burn_in=4, backend="sharded",
+                         k_fuse=4, seed=9)
+    (plan,) = plan_mesh_sweep(spec_r, mesh)
+    results["ragged_plan"] = (plan.n_rows, plan.n_pad, plan.n_padded,
+                              plan.ens_extent)
+    res_r = run_window_sweep(spec_r, mesh=mesh)
+    res_r1 = run_window_sweep(dataclasses.replace(spec_r,
+                                                  backend="reference"))
+    pad_ok = all(
+        a.u == b.u and a.rate == b.rate
+        and bool(np.isclose(a.w2, b.w2, rtol=1e-4, atol=1e-6))
+        for a, b in zip(res_r.records, res_r1.records))
+    results["ragged_purity"] = bool(pad_ok)
+
+    # multi-grid-point trial_base bookkeeping stays aligned across padding
+    spec_g = WindowSweep(Ls=(16, 32), n_vs=(2,), deltas=(2.0, math.inf),
+                         replicas=1, n_steps=8, burn_in=4, backend="sharded",
+                         k_fuse=4, seed=2)
+    plans = plan_mesh_sweep(spec_g, mesh)
+    results["grid_bases"] = [p.trial_base for p in plans]
+    res_g = run_window_sweep(spec_g, mesh=mesh)
+    res_g1 = run_window_sweep(dataclasses.replace(spec_g,
+                                                  backend="reference"))
+    results["grid_purity"] = bool(all(
+        a.u == b.u and a.rate == b.rate
+        for a, b in zip(res_g.records, res_g1.records)))
+
+    print(json.dumps(results))
+""")
+
+
+@pytest.fixture(scope="module")
+def sweep_results():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sweep_bit_identical_to_serial_loop(sweep_results):
+    """The tentpole claim: on a 2x4 mesh, the batched sharded sweep's
+    trajectories equal the single-device serial per-Δ loop bit-for-bit."""
+    assert sweep_results["engine_bit_identity"]
+
+
+def test_sweep_stats_contract(sweep_results):
+    assert sweep_results["u_exact"]
+    assert sweep_results["gvt_exact"]
+    assert sweep_results["w2_close"]
+    assert sweep_results["moments_close"]
+    assert sweep_results["wa_nan"]
+
+
+def test_sweep_records_match_single_device(sweep_results):
+    assert sweep_results["records_parity"]
+
+
+def test_serial_sharded_baseline_matches(sweep_results):
+    assert sweep_results["serial_sharded_parity"]
+
+
+def test_ragged_padding_does_not_contaminate(sweep_results):
+    n_rows, n_pad, n_padded, ens = sweep_results["ragged_plan"]
+    assert (n_rows, n_pad, n_padded, ens) == (3, 1, 4, 2)
+    assert sweep_results["ragged_purity"]
+
+
+def test_multi_grid_point_bases(sweep_results):
+    assert sweep_results["grid_bases"] == [0, 2]
+    assert sweep_results["grid_purity"]
+
+
+# ---------------------------------------------------------------------------
+# in-process scheduler tests (AbstractMesh: axis sizes only, no devices)
+# ---------------------------------------------------------------------------
+
+
+def _abstract_mesh(ens=2, ring=4):
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh((("data", ens), ("model", ring)))
+    except TypeError:
+        return AbstractMesh((ens, ring), ("data", "model"))
+
+
+def test_plan_mesh_sweep_shapes():
+    from repro.experiments.sweep import WindowSweep, plan_mesh_sweep
+    spec = WindowSweep(Ls=(16, 32), n_vs=(1, 2), deltas=(1.0, math.inf),
+                       replicas=3, n_steps=16, burn_in=10, backend="sharded",
+                       k_fuse=4)
+    plans = plan_mesh_sweep(spec, _abstract_mesh())
+    assert len(plans) == 4
+    assert [p.trial_base for p in plans] == [0, 6, 12, 18]
+    for p in plans:
+        assert p.n_rows == 6 and p.n_pad == 0
+        assert p.ens_extent == 2 and p.ring_extent == 4
+        assert p.burn_in == 12          # 10 rounded up to whole 4-chunks
+
+
+def test_plan_mesh_sweep_ragged_and_errors():
+    from repro.experiments.sweep import WindowSweep, plan_mesh_sweep
+    spec = WindowSweep(Ls=(16,), n_vs=(1,), deltas=(1.0, 2.0, math.inf),
+                       replicas=1, n_steps=8, burn_in=8, backend="sharded",
+                       k_fuse=4)
+    (p,) = plan_mesh_sweep(spec, _abstract_mesh())
+    assert (p.n_rows, p.n_pad, p.n_padded) == (3, 1, 4)
+
+    import dataclasses
+    with pytest.raises(ValueError, match="divide L"):
+        plan_mesh_sweep(dataclasses.replace(spec, Ls=(30,)),
+                        _abstract_mesh())
+    with pytest.raises(ValueError, match="whole chunks"):
+        plan_mesh_sweep(dataclasses.replace(spec, n_steps=10),
+                        _abstract_mesh())
+    with pytest.raises(ValueError, match="axes"):
+        from repro.core.distributed import DistConfig
+        plan_mesh_sweep(spec, _abstract_mesh(),
+                        DistConfig(ens_axes=("pod",)))
+
+
+def test_run_window_sweep_mesh_arg_validation():
+    from repro.experiments.sweep import (WindowSweep, run_window_sweep,
+                                         serial_window_sweep)
+    sharded = WindowSweep(backend="sharded", n_steps=16, burn_in=0, k_fuse=4)
+    with pytest.raises(ValueError, match="mesh"):
+        run_window_sweep(sharded)
+    single = WindowSweep(backend="reference", n_steps=16, burn_in=0)
+    with pytest.raises(ValueError, match="sharded"):
+        run_window_sweep(single, mesh=_abstract_mesh())
+    with pytest.raises(ValueError, match="sharded"):
+        serial_window_sweep(single, mesh=_abstract_mesh())
+
+
+def test_steady_state_sweep_rejects_unknown_opts():
+    from repro.core.ensemble import steady_state_sweep
+    from repro.core.horizon import PDESConfig
+    cfg = PDESConfig(L=16, n_v=1, delta=math.inf)
+    with pytest.raises(ValueError, match="engine_opts"):
+        steady_state_sweep(cfg, (1.0,), n_trials=2, burn_in_steps=2,
+                           measure_steps=4,
+                           engine_opts={"interpret": False})

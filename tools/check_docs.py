@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Markdown link / anchor / orphan checker for the documentation layer.
+
+Usage::
+
+    python tools/check_docs.py README.md docs
+
+Checks, for every ``.md`` file given (directories are walked):
+
+* **relative links** — ``[text](target)`` targets that are not absolute
+  URLs must exist on disk, relative to the linking file;
+* **anchors** — a ``target#fragment`` (or bare ``#fragment``) must match a
+  heading in the target file after GitHub slugification (lowercase,
+  spaces -> dashes, punctuation dropped);
+* **orphans** — every checked file except the roots (``README.md`` and
+  files directly at a given path) must be linked from some other checked
+  file, so a doc can't silently fall out of the tree.
+
+Zero dependencies (stdlib only) so the CI docs job needs nothing beyond a
+checkout; exits nonzero with one line per problem.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must exist too.  Nested brackets/parens in link text or URLs are
+# not used in this repo's docs.
+_LINK = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*)$", re.MULTILINE)
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading (lowercase, dashes, no punct)."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip())      # drop code spans
+    h = h.lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)      # drop punctuation
+    return h.replace(" ", "-")
+
+
+def strip_code(text: str) -> str:
+    """Remove fenced code blocks (links inside them are examples, not links)."""
+    return _FENCE.sub("", text)
+
+
+def heading_slugs(path: pathlib.Path) -> set[str]:
+    """All heading anchors a file exposes (with GitHub's -1, -2 dedup)."""
+    slugs: dict[str, int] = {}
+    out = set()
+    for m in _HEADING.finditer(strip_code(path.read_text())):
+        s = github_slug(m.group(2))
+        n = slugs.get(s, 0)
+        slugs[s] = n + 1
+        out.add(s if n == 0 else f"{s}-{n}")
+    return out
+
+
+def collect(paths: list[str]) -> list[pathlib.Path]:
+    """Expand the CLI args into the list of markdown files to check."""
+    files = []
+    for p in map(pathlib.Path, paths):
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        else:
+            files.append(p)
+    return files
+
+
+def check(paths: list[str]) -> list[str]:
+    """Run all checks; returns a list of problem strings (empty = clean)."""
+    files = collect(paths)
+    problems = []
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        return [f"missing input: {f}" for f in missing]
+    roots = {f.resolve() for f in files
+             if f.name == "README.md" or f.parent == pathlib.Path(".")}
+    linked: set[pathlib.Path] = set()
+    for f in files:
+        text = strip_code(f.read_text())
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # absolute URL
+                continue
+            target, _, frag = target.partition("#")
+            tpath = f if not target else (f.parent / target)
+            if not tpath.exists():
+                problems.append(f"{f}: broken link -> {m.group(1)}")
+                continue
+            if tpath.suffix == ".md":
+                linked.add(tpath.resolve())
+            if frag and tpath.suffix == ".md":
+                if github_slug(frag) not in heading_slugs(tpath):
+                    problems.append(
+                        f"{f}: broken anchor -> {m.group(1)} "
+                        f"(no heading slug {github_slug(frag)!r} "
+                        f"in {tpath})")
+    for f in files:
+        if f.resolve() not in roots and f.resolve() not in linked:
+            problems.append(
+                f"{f}: orphan — not linked from any checked document")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    """CLI entry point; returns the exit code."""
+    if not argv:
+        print(__doc__)
+        return 2
+    problems = check(argv)
+    for p in problems:
+        print(p)
+    if not problems:
+        print(f"docs check OK ({len(collect(argv))} file(s))")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
