@@ -682,6 +682,74 @@ def bench_window_sweep_sharded(fast=False):
                 "value": speedup, "higher_is_better": True})
 
 
+# ---------------------------------------------------------------------------
+# Sweep service — multiplexed request queue vs one-sweep-per-user serial loop
+# ---------------------------------------------------------------------------
+
+
+def bench_sweep_service(fast=False, backend=None):
+    """Coalesced service drain vs running each user's sweep separately.
+
+    A queue of six users requests nested Δ grids over the same study
+    (prefix-structured, one exact duplicate): the service unions their
+    (trial, Δ) rows into a single device pass, computing shared rows once
+    and deduping the duplicate spec entirely, while the serial baseline is
+    what those users would do without the service — one
+    ``run_window_sweep`` each.  Every response is asserted bit-identical
+    to its direct run *before* timing, so the speedup is bought by
+    coalescing alone, never by changed physics.  The gate metric is the
+    coalesced-over-serial speedup (hardware-portable ratio, floor 1.5x).
+    """
+    from repro.experiments import WindowSweep, run_window_sweep
+    from repro.service import SweepService
+    G = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, math.inf)
+    common = dict(Ls=(128 if fast else 256,), n_vs=(10,), replicas=8,
+                  n_steps=128, burn_in=96,
+                  backend=backend or "pallas_multistep", seed=3)
+    queue = [("alice", G), ("bob", G[:3]), ("carol", G[:5]),
+             ("dana", G), ("erin", G[:2]), ("frank", G[:4])]
+    specs = [(who, WindowSweep(deltas=d, **common)) for who, d in queue]
+
+    def serve():
+        svc = SweepService()
+        for who, s in specs:
+            svc.submit(s, requester=who)
+        return svc, svc.drain()
+
+    def serial():
+        return [run_window_sweep(s) for _, s in specs]
+
+    svc, responses = serve()            # compile + identity capture
+    directs = serial()
+    for resp, direct in zip(responses, directs):
+        assert resp.result.records == direct.records, resp.requester
+    t_coalesced = min(_timed(lambda: serve())[1] for _ in range(3))
+    t_serial = min(_timed(lambda: serial())[1] for _ in range(3))
+    speedup = t_serial / t_coalesced
+    stats = svc.stats.as_dict()
+    rec = {"spec": {"L": common["Ls"][0], "n_v": 10,
+                    "replicas": common["replicas"],
+                    "n_steps": common["n_steps"],
+                    "burn_in": common["burn_in"],
+                    "backend": common["backend"],
+                    "queue": [(who, len(d)) for who, d in queue]},
+           "us_coalesced": t_coalesced, "us_serial": t_serial,
+           "speedup_coalesced_vs_serial": speedup,
+           "service_stats": stats}
+    assert stats["n_passes"] == 1, stats          # one shared device pass
+    assert stats["n_deduped"] == 1, stats         # dana rode alice's rows
+    assert stats["rows_computed"] < stats["rows_requested"], stats
+    assert speedup >= 1.5, rec
+    _emit("bench_sweep_service", t_coalesced,
+          f"coalesced {t_coalesced / 1e3:.0f}ms vs serial "
+          f"{t_serial / 1e3:.0f}ms (x{speedup:.2f}) for "
+          f"{stats['n_requests']} requests -> {stats['rows_computed']} "
+          f"union rows ({stats['rows_requested']} requested)",
+          rec,
+          gate={"metric": "speedup_coalesced_vs_serial", "value": speedup,
+                "higher_is_better": True})
+
+
 BENCHES = {
     "fig2": fig2_utilization_evolution,
     "eq8": eq8_uinf_extrapolation,
@@ -695,6 +763,7 @@ BENCHES = {
     "pdes_comm": bench_pdes_comm,
     "window_sweep": bench_window_sweep,
     "window_sweep_sharded": bench_window_sweep_sharded,
+    "sweep_service": bench_sweep_service,
 }
 
 # ---------------------------------------------------------------------------

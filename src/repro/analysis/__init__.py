@@ -36,14 +36,14 @@ or programmatically::
 from __future__ import annotations
 
 from ..core.engine import BACKENDS
-from .probes import Probe, ProbeSkip, iter_probes
+from .probes import Probe, iter_probes
 from .report import (BackendReport, Finding, Report, apply_waivers,
                      parse_waivers, summary_verdict)
 from .rules import ALL_RULES
 
 __all__ = ["ALL_RULES", "BACKENDS", "BackendReport", "Finding", "Probe",
-           "ProbeSkip", "Report", "analysis_verdict", "analyze",
-           "analyze_backend", "analyze_probe", "iter_probes"]
+           "Report", "analysis_verdict", "analyze", "analyze_backend",
+           "analyze_probe", "iter_probes"]
 
 
 def analyze_probe(probe: Probe, rules=None, **options) -> list:
@@ -62,9 +62,6 @@ def analyze_backend(backend: str, rules=None, waivers=(),
     selected = rules or ALL_RULES
     rep = BackendReport(backend=backend, rules_run=list(selected))
     for probe in iter_probes(backend):
-        if isinstance(probe, ProbeSkip):
-            rep.skipped[probe.name] = probe.reason
-            continue
         rep.findings.extend(analyze_probe(probe, selected, **options))
     rep.findings = apply_waivers(rep.findings, waivers)
     return rep

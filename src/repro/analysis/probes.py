@@ -23,7 +23,10 @@ The ``sharded`` backend is traced on an :class:`jax.sharding.AbstractMesh`
 backend — ``sharded`` included, since multi-device sweep sharding landed —
 yields a sweep probe whose per-row Δ column is a traced operand, so the
 window-bound rule can prove the guard compares against *that* operand on
-every advance site.
+every advance site.  The ``service`` probe traces the coalesced-batch form
+on top of that (``repro.service``): the per-row trial-index vector rides
+along as a traced operand, so the invariants are proven for multiplexed
+passes too — rows with arbitrary global stream indices and mixed Δs.
 """
 from __future__ import annotations
 
@@ -44,7 +47,7 @@ DEFAULT_DELTA = 8.0
 class Probe:
     """One traced entry point + the metadata rules interpret it with."""
 
-    name: str                 # "step" | "sweep" | "stale" | "vmem"
+    name: str                 # "step" | "sweep" | "stale" | "service" | "vmem"
     backend: str
     graph: Graph
     tau_in: int               # flat input index of tau
@@ -56,12 +59,7 @@ class Probe:
     shard_L: dict = dataclasses.field(default_factory=dict)  # axis -> L_local
     hlo: str | None = None    # lowered HLO text (sharded probes)
     dtype: str = "float32"    # declared base dtype of tau
-
-
-@dataclasses.dataclass
-class ProbeSkip:
-    name: str
-    reason: str
+    trial_input: int | None = None   # flat input index of the trial vector
 
 
 def _trace(fn, *args):
@@ -104,6 +102,15 @@ def _single_probes(backend: str):
                 ring_widths=frozenset({L, L + 2}), L_ring=L,
                 delta=0.0, delta_input=3)
 
+    # the coalesced-batch form (repro.service): per-row Δ column plus a
+    # per-row trial-index vector instead of a scalar stream base
+    g = _trace(fn, jnp.zeros((B, L), jnp.float32), jnp.int32(0),
+               jnp.uint32(0), jnp.full((B, 1), DEFAULT_DELTA, jnp.float32),
+               jnp.arange(B, dtype=jnp.int32))
+    yield Probe("service", backend, g, tau_in=0, tau_out=0,
+                ring_widths=frozenset({L, L + 2}), L_ring=L,
+                delta=0.0, delta_input=3, trial_input=4)
+
     if backend in ("pallas", "pallas_multistep"):
         # production-shape trace: the VMEM rule sizes real BlockSpecs here
         Bp, Lp, Kp = 64, 1024, 16
@@ -140,13 +147,22 @@ def _sharded_probes():
     L_l = L // ring
     cfg = PDESConfig(L=L, n_v=4, delta=DEFAULT_DELTA)
     mesh = _abstract_mesh(ens, ring)
-    # (name, mode, K, with Δ-column sweep operand)
-    for name, mode, K, sweep in (("step", "exact", 2, False),
-                                 ("stale", "commavoid", 4, False),
-                                 ("sweep", "exact", 2, True)):
+    # (name, mode, K, with Δ-column sweep operand, with trial-vector operand)
+    for name, mode, K, sweep, trial in (
+            ("step", "exact", 2, False, False),
+            ("stale", "commavoid", 4, False, False),
+            ("sweep", "exact", 2, True, False),
+            ("service", "exact", 2, True, True)):
         dist = DistConfig(mode=mode, k_chunk=K)
-        fn = functools.partial(_shard_body, cfg=cfg, dist=dist,
-                               n_steps=K, L_total=L)
+        if trial:
+            def fn(tau0, off0, comp0, seed, step0, b0, dcol, tcol,
+                   dist=dist):
+                return _shard_body(tau0, off0, comp0, seed, step0, b0,
+                                   dcol, tcol, cfg=cfg, dist=dist,
+                                   n_steps=K, L_total=L)
+        else:
+            fn = functools.partial(_shard_body, cfg=cfg, dist=dist,
+                                   n_steps=K, L_total=L)
         in_specs = (P(dist.ens_axes, dist.ring_axis), P(dist.ens_axes),
                     P(dist.ens_axes), P(), P(), P())
         shapes = [jax.ShapeDtypeStruct((B, L), jnp.float32),
@@ -159,6 +175,10 @@ def _sharded_probes():
             # the Δ column shards over the ensemble axes like the tau rows
             in_specs += (P(dist.ens_axes),)
             shapes.append(jax.ShapeDtypeStruct((B,), jnp.float32))
+        if trial:
+            # ...as does the coalesced-batch per-row trial-index vector
+            in_specs += (P(dist.ens_axes),)
+            shapes.append(jax.ShapeDtypeStruct((B,), jnp.int32))
         shard_fn = shard_map(
             fn, mesh=mesh,
             in_specs=in_specs,
@@ -167,8 +187,10 @@ def _sharded_probes():
                        (P(None, dist.ens_axes),) * len(STAT_KEYS)),
             check_rep=False)
         args = [jnp.zeros(s.shape, s.dtype) for s in shapes]
+        if trial:
+            args[7] = jnp.arange(B, dtype=jnp.int32)
         if sweep:
-            args[-1] = jnp.full((B,), DEFAULT_DELTA, jnp.float32)
+            args[6] = jnp.full((B,), DEFAULT_DELTA, jnp.float32)
         g = _trace(shard_fn, *args)
         hlo = None
         try:
@@ -182,11 +204,12 @@ def _sharded_probes():
                     ring_widths=frozenset(widths), L_ring=L,
                     delta=0.0 if sweep else cfg.delta,
                     delta_input=6 if sweep else None,
+                    trial_input=7 if trial else None,
                     shard_L={"model": L_l}, hlo=hlo)
 
 
 def iter_probes(backend: str):
-    """Yield :class:`Probe` / :class:`ProbeSkip` for one backend."""
+    """Yield every :class:`Probe` of one backend."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     if backend == "sharded":

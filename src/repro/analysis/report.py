@@ -39,11 +39,10 @@ class Finding:
 
 @dataclasses.dataclass
 class BackendReport:
-    """All findings and skips for one backend."""
+    """All findings for one backend (every probe always runs)."""
 
     backend: str
     findings: list = dataclasses.field(default_factory=list)
-    skipped: dict = dataclasses.field(default_factory=dict)  # probe -> reason
     rules_run: list = dataclasses.field(default_factory=list)
 
     @property
@@ -55,7 +54,6 @@ class BackendReport:
             "backend": self.backend,
             "ok": self.ok,
             "rules_run": sorted(set(self.rules_run)),
-            "skipped": dict(self.skipped),
             "findings": [f.to_dict() for f in self.findings],
         }
 
@@ -92,8 +90,6 @@ class Report:
             status = "OK" if b.ok else "FAIL"
             lines.append(f"[{status}] backend={b.backend} "
                          f"rules={','.join(sorted(set(b.rules_run)))}")
-            for probe, reason in sorted(b.skipped.items()):
-                lines.append(f"    skip probe={probe}: {reason}")
             for f in b.findings:
                 tag = " (waived)" if f.waived else ""
                 loc = f" at {f.op}" if f.op else ""

@@ -33,7 +33,6 @@ makes a sharded sweep bit-identical to the single-device serial per-Δ loop
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Sequence
 
@@ -118,8 +117,8 @@ def _multi_axis_index(axes: Sequence[str]):
 
 
 def _shard_body(tau0, off0, comp0, seed, step_base, trial_base,
-                delta_col=None, *, cfg: PDESConfig, dist: DistConfig,
-                n_steps: int, L_total: int):
+                delta_col=None, trial_col=None, *, cfg: PDESConfig,
+                dist: DistConfig, n_steps: int, L_total: int):
     """Runs inside shard_map.  tau0: (B_l, L_l) local shard.
 
     ``off0``/``comp0`` are the carried Kahan rebasing offset (sharded like
@@ -130,14 +129,21 @@ def _shard_body(tau0, off0, comp0, seed, step_base, trial_base,
     ``trial_base`` offsets it along the ensemble so row 0 of this run
     consumes global stream index ``trial_base``.  ``delta_col`` is either
     None (static ``cfg.delta`` window) or the local ``(B_l,)`` slice of the
-    per-row window widths of a batched sweep.
+    per-row window widths of a batched sweep.  ``trial_col`` (optional
+    local ``(B_l,)`` slice, sharded like the tau rows) carries *per-row
+    global* stream indices — the coalesced-batch operand of
+    ``repro.service``; it overrides the scalar ``trial_base`` entirely.
     """
     dtype = tau0.dtype
     ring = dist.ring_axis
     ring_n = axis_size(ring)
     ring_i = lax.axis_index(ring)
     B_l, L_l = tau0.shape
-    b0 = trial_base + _multi_axis_index(dist.ens_axes) * B_l
+    if trial_col is not None:
+        # each shard's slice already holds its rows' global trial indices
+        b0 = trial_col.astype(jnp.int32)
+    else:
+        b0 = trial_base + _multi_axis_index(dist.ens_axes) * B_l
     l0 = ring_i * L_l
     K = dist.k_chunk
     n_chunks = -(-n_steps // K)  # stats trimmed to n_steps by caller
@@ -183,10 +189,12 @@ def _shard_body(tau0, off0, comp0, seed, step_base, trial_base,
         pe_idx = jnp.remainder(
             l0 - K + jnp.arange(L_l + 2 * K, dtype=jnp.int32), L_total)
 
+        rows = (b0 if b0.ndim == 1
+                else b0 + jnp.arange(B_l, dtype=jnp.int32))
+
         def one(tau_e, s):
             from .events import counter_bits
-            bits = counter_bits(seed, step0 + s,
-                                (b0 + jnp.arange(B_l, dtype=jnp.int32))[:, None],
+            bits = counter_bits(seed, step0 + s, rows[:, None],
                                 pe_idx[None, :])
             # non-periodic edges: edge columns turn garbage 1 cell/step; the
             # interior [K, K + L_l) stays exact for all s < K (DESIGN.md B4).
@@ -227,13 +235,27 @@ def _shard_body(tau0, off0, comp0, seed, step_base, trial_base,
 
 
 def _sharded_call(cfg: PDESConfig, mesh: Mesh, dist: DistConfig,
-                  n_steps: int, sweep: bool):
-    """shard_map-wrapped ``_shard_body`` with specs matching its operands."""
-    fn = functools.partial(
-        _shard_body, cfg=cfg, dist=dist, n_steps=n_steps, L_total=cfg.L)
+                  n_steps: int, sweep: bool, trial_rows: bool = False):
+    """shard_map-wrapped ``_shard_body`` with specs matching its operands.
+
+    ``sweep`` appends the ensemble-sharded per-row Δ column; ``trial_rows``
+    appends the ensemble-sharded per-row trial-index column (the
+    coalesced-batch operand) — both ride the same ``P(ens)`` layout as the
+    tau rows.
+    """
+    def fn(tau0, off0, comp0, seed, step_base, trial_base, *cols):
+        cols = list(cols)
+        delta_col = cols.pop(0) if sweep else None
+        trial_col = cols.pop(0) if trial_rows else None
+        return _shard_body(tau0, off0, comp0, seed, step_base, trial_base,
+                           delta_col, trial_col, cfg=cfg, dist=dist,
+                           n_steps=n_steps, L_total=cfg.L)
+
     ens, ring = dist.ens_axes, dist.ring_axis
     in_specs = (P(ens, ring), P(ens), P(ens), P(), P(), P())
     if sweep:
+        in_specs += (P(ens),)
+    if trial_rows:
         in_specs += (P(ens),)
     return shard_map(
         fn,
@@ -267,15 +289,21 @@ def run_sharded_state(
     window column of a batched sweep and ``trial_base`` the counter-stream
     index of row 0 — together they make a sharded sweep consume exactly the
     stream slices the single-device serial loop assigns to the same rows.
-    Stats keys are :data:`STAT_KEYS`; ``gvt``/``mean_tau`` are absolute
-    (offset included).
+    A ``(B,)`` ``trial_base`` instead assigns every row its own global
+    stream index (the coalesced-batch mode of ``repro.service``); the
+    vector shards over the ensemble axes like the tau rows.  Stats keys are
+    :data:`STAT_KEYS`; ``gvt``/``mean_tau`` are absolute (offset included).
     """
     sweep = deltas is not None
-    shard_fn = _sharded_call(cfg, mesh, dist, n_steps, sweep)
+    trial_base = jnp.asarray(trial_base, jnp.int32)
+    trial_rows = trial_base.ndim == 1
+    shard_fn = _sharded_call(cfg, mesh, dist, n_steps, sweep, trial_rows)
     args = [tau0, off0, comp0, jnp.uint32(seed), jnp.int32(step_base),
-            jnp.int32(trial_base)]
+            jnp.int32(0) if trial_rows else trial_base]
     if sweep:
         args.append(jnp.asarray(deltas, tau0.dtype))
+    if trial_rows:
+        args.append(trial_base)
     tau, off, comp, stats = jax.jit(shard_fn)(*args)
     return tau, off, comp, {
         k: v[:n_steps] for k, v in zip(STAT_KEYS, stats)}

@@ -134,8 +134,11 @@ def _make_advance(cfg: PDESConfig, ecfg: EngineConfig, B: int, L: int):
     ``(tau_k, moments (k, B))`` with ``k`` static.  ``delta_col`` is either
     None (static ``cfg.delta`` window) or a traced ``(B, 1)`` column of
     per-row window widths — the batched window-sweep operand; ``b0`` is the
-    global trial index of row 0 in the counter event stream.  No rebasing
-    inside — the shared driver owns that.
+    counter-stream trial coordinate: a scalar global trial index of row 0
+    (rows consume ``b0 + r``) or a ``(B,)`` vector of per-row indices — the
+    coalesced-batch operand of ``repro.service``, where rows packed from
+    different requests address arbitrary (possibly duplicate) stream
+    coordinates.  No rebasing inside — the shared driver owns that.
     """
     stale = ecfg.window == "stale"
 
@@ -189,11 +192,16 @@ def _make_advance(cfg: PDESConfig, ecfg: EngineConfig, B: int, L: int):
         bb = _auto_block_b(B, L, ecfg.block_b, in_kernel_bits=True)
 
         def advance(tau, step0, seed, k, delta_col, b0):
+            # a (B,) b0 becomes the per-row trial column; ctr's scalar slot
+            # is then unused (zeroed) — the kernel reads the column instead.
+            vec = getattr(b0, "ndim", 0) == 1
+            b0_scalar = jnp.uint32(0) if vec else b0.astype(jnp.uint32)
+            trial_col = b0.astype(jnp.uint32)[:, None] if vec else None
             ctr = jnp.stack([
                 seed.astype(jnp.uint32), step0.astype(jnp.uint32),
-                b0.astype(jnp.uint32), jnp.uint32(0)])[None, :]
+                b0_scalar, jnp.uint32(0)])[None, :]
             return pdes_multistep_counter(
-                tau, ctr, delta_col, k_steps=k,
+                tau, ctr, delta_col, trial_col, k_steps=k,
                 n_v=cfg.n_v, delta=cfg.delta, rd_mode=cfg.rd_mode,
                 border_both=cfg.border_both, block_b=bb,
                 interpret=ecfg.interpret)
@@ -213,7 +221,8 @@ def _run_single(state: SimState, seed, cfg: PDESConfig, ecfg: EngineConfig,
           "mean"   -> time-averaged StepStats (O(1) memory in n_steps);
           "burn"   -> state only (stats math dead-code-eliminated).
     deltas: optional (B,) per-row window widths (sweep mode, see ``run``).
-    trial_base: global trial index of row 0 in the counter event stream.
+    trial_base: counter-stream trial coordinate — scalar index of row 0,
+      or a (B,) vector of per-row global trial indices (see ``run``).
     """
     B, L = state.tau.shape
     K = max(1, min(ecfg.k_fuse, n_steps))
@@ -346,7 +355,12 @@ class PDESEngine:
             stream.  A serial per-Δ loop that runs window ``w`` with
             ``trial_base=w*replicas`` consumes exactly the stream slice the
             batched sweep assigns to those rows, so the two are comparable
-            bit-for-bit (tests/test_experiments.py).
+            bit-for-bit (tests/test_experiments.py).  A ``(B,)`` int vector
+            instead assigns every row its *own* global trial index — the
+            coalesced-batch mode of ``repro.service``, which packs rows
+            from many requests (arbitrary, possibly duplicate, stream
+            coordinates) into one pass; ``trial_base=c + arange(B)`` is
+            bit-identical to the scalar ``trial_base=c``.
         """
         return self._dispatch(state, seed, n_steps, "record",
                               deltas=deltas, trial_base=trial_base)
@@ -373,6 +387,14 @@ class PDESEngine:
                 raise ValueError(
                     f"deltas must have shape ({state.tau.shape[0]},) — one "
                     f"window width per ensemble row — got {deltas.shape}")
+        trial_base = jnp.asarray(trial_base, jnp.int32)
+        if trial_base.ndim not in (0, 1) or (
+                trial_base.ndim == 1
+                and trial_base.shape != (state.tau.shape[0],)):
+            raise ValueError(
+                f"trial_base must be a scalar or have shape "
+                f"({state.tau.shape[0]},) — one stream index per ensemble "
+                f"row — got {trial_base.shape}")
         if self.ecfg.backend == "sharded":
             return self._run_sharded(state, seed, n_steps, mode,
                                      deltas=deltas, trial_base=trial_base)

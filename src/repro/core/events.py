@@ -100,7 +100,18 @@ def counter_bits_block(
     n_b: int,
     n_l: int,
 ) -> jax.Array:
-    """Convenience: bits for the block [b0, b0+n_b) x [l0, l0+n_l) -> (n_b, n_l, 2)."""
-    bi = b0 + jnp.arange(n_b, dtype=jnp.int32)[:, None]
+    """Convenience: bits for the block [b0, b0+n_b) x [l0, l0+n_l) -> (n_b, n_l, 2).
+
+    ``b0`` is either a scalar (rows consume the contiguous stream slice
+    ``[b0, b0 + n_b)``) or an ``(n_b,)`` vector of *per-row* global trial
+    indices — the coalesced-batch form used by ``repro.service``, where rows
+    packed from different requests address arbitrary (possibly duplicate)
+    stream coordinates.  A vector ``b0 = scalar + arange(n_b)`` is
+    bit-identical to the scalar form.
+    """
+    if getattr(b0, "ndim", 0) == 1:
+        bi = jnp.asarray(b0, jnp.int32)[:, None]
+    else:
+        bi = b0 + jnp.arange(n_b, dtype=jnp.int32)[:, None]
     li = l0 + jnp.arange(n_l, dtype=jnp.int32)[None, :]
     return counter_bits(seed, step, bi, li)

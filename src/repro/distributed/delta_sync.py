@@ -20,12 +20,19 @@ its steady-state utilization is predicted by the paper's own fit
 ``core.theory.u_rd(delta)`` — verified in tests/test_delta_sync.py.  That
 curve is exactly the capacity-planning chart for a cluster with straggler
 spread ~ Exp(1): pick Δ to trade progress-rate bound against memory bound.
+
+The Eq. (3) predicate is not duplicated here: the gate is the shared
+``repro.service.scheduler.window_admission`` helper — the same one the
+sweep service uses for requester fairness and ``repro.serve`` uses (via
+this scheduler) for decode-lane admission.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from ..service.scheduler import window_admission
 
 
 @dataclasses.dataclass
@@ -63,7 +70,8 @@ class DeltaScheduler:
             durations = self._rng.exponential(1.0, cfg.n_workers)
         durations = np.asarray(durations, dtype=np.float64)
         gvt = self.tau.min()
-        allowed = self.tau <= cfg.delta + gvt      # Eq. (3), RD limit
+        # Eq. (3), RD limit — the one shared window predicate
+        allowed = window_admission(self.tau, cfg.delta, gvt)
         self.tau = np.where(allowed, self.tau + durations, self.tau)
         self.rounds += 1
         self.committed += int(allowed.sum())

@@ -9,9 +9,11 @@ unit width-bounded cost), the paper's tuning-parameter claim.
 """
 from .optimal_window import (  # noqa: F401
     OptimalWindow,
+    RefinedWindow,
     efficiency,
     find_optimal_window,
     optimal_windows,
+    refine_optimal_window,
 )
 from .sweep import (  # noqa: F401
     MeshSweepPlan,

@@ -29,6 +29,7 @@ import math
 
 import numpy as np
 
+from ..core.horizon import PDESConfig
 from .sweep import SweepResult, WindowSweep, run_window_sweep
 
 
@@ -91,3 +92,135 @@ def optimal_windows(spec_or_result: WindowSweep | SweepResult
               else run_window_sweep(spec_or_result))
     return [find_optimal_window(result, L=int(L), n_v=int(n_v))
             for L in result.spec.Ls for n_v in result.spec.n_vs]
+
+
+# ---------------------------------------------------------------------------
+# adaptive Δ* refinement through the sweep service
+# ---------------------------------------------------------------------------
+
+_INV_PHI = (math.sqrt(5.0) - 1.0) / 2.0     # golden-section shrink ratio
+
+
+@dataclasses.dataclass(frozen=True)
+class RefinedWindow:
+    """A golden-section-refined optimum of one (L, N_V) grid point.
+
+    ``evaluations`` logs every Δ probed, in evaluation order, with its
+    efficiency — the coarse grid first, then the interior golden-section
+    points, then the polish re-measurement of the winner.
+    """
+
+    L: int
+    n_v: int
+    delta_star: float
+    eff_star: float
+    u_star: float
+    w_star: float
+    bracket: tuple[float, float]   # initial finite bracket around Δ*
+    evaluations: tuple[tuple[float, float], ...]   # (Δ, efficiency)
+    rounds: int                    # golden-section rounds actually run
+    interior: bool                 # coarse argmax strictly inside the grid
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["evaluations"] = [list(e) for e in self.evaluations]
+        d["bracket"] = list(self.bracket)
+        return d
+
+
+def refine_optimal_window(spec: WindowSweep, *, L=None, n_v=None,
+                          rounds: int = 4, polish_steps: int | None = None,
+                          service=None, mesh=None, dist=None
+                          ) -> RefinedWindow:
+    """Golden-section search for Δ*, issuing probes through the sweep service.
+
+    ``spec.deltas`` is the coarse bracketing grid.  Every probe is a
+    single-Δ ``WindowSweep`` submitted to a :class:`~repro.service.
+    SweepService` (``service=`` to share one across calls; else a private
+    one is built with ``mesh``/``dist``), so
+
+    * all probes of a round share a ``CompatKey`` and coalesce into one
+      device pass (single-Δ specs always lay their rows on trials
+      ``0..replicas-1``),
+    * re-probing a Δ dedups at the service layer (same fingerprint), and
+    * the final polish round — the winner re-measured with ``polish_steps``
+      (default ``2 * spec.n_steps``) — reuses every burned-in row from the
+      service state cache (the cache key excludes ``n_steps``).
+
+    The search runs only when the coarse argmax is interior (the paper's
+    claim for a bracketing grid); a boundary argmax is returned as-is with
+    ``interior=False``.  Versus sweeping a dense fixed grid, the refiner
+    reaches the same Δ* to bracket tolerance in far fewer engine row-steps
+    (tests/test_service.py).
+    """
+    from ..service import SweepService
+    L = int(L if L is not None else spec.Ls[0])
+    n_v = int(n_v if n_v is not None else spec.n_vs[0])
+    cfg = PDESConfig(L=L, n_v=n_v, delta=math.inf, rd_mode=spec.rd_mode,
+                     border_both=spec.border_both)
+    burn = int(spec.burn_in_for(cfg))
+    if service is None:
+        service = SweepService(mesh=mesh, dist=dist)
+    memo: dict[float, tuple[float, float, float]] = {}   # Δ -> (u, w, eff)
+    evaluations: list[tuple[float, float]] = []
+
+    def probe_spec(delta: float, n_steps: int) -> WindowSweep:
+        return dataclasses.replace(
+            spec, Ls=(L,), n_vs=(n_v,), deltas=(float(delta),),
+            n_steps=int(n_steps), burn_in=burn)
+
+    def evaluate(deltas, n_steps=spec.n_steps):
+        new = [float(d) for d in deltas if float(d) not in memo]
+        reqs = [service.submit(probe_spec(d, n_steps), requester="refiner")
+                for d in new]
+        if reqs:
+            by_id = {r.request_id: r.result
+                     for r in service.drain() if r.result is not None}
+            for d, req in zip(new, reqs):
+                rec = by_id[req.request_id].records[0]
+                eff = float(efficiency(rec.u, rec.w))
+                memo[d] = (float(rec.u), float(rec.w), eff)
+                evaluations.append((d, eff))
+        return [memo[float(d)][2] for d in deltas]
+
+    # coarse pass: the spec's own grid, one coalesced pass
+    grid = tuple(sorted(float(d) for d in spec.deltas))
+    evaluate(grid)
+    i = int(np.argmax([memo[d][2] for d in grid]))
+    interior = 0 < i < len(grid) - 1
+    finite = [d for d in grid if math.isfinite(d)]
+    if not finite:
+        raise ValueError("refinement needs at least one finite Δ in the grid")
+    a = grid[i - 1] if i > 0 and math.isfinite(grid[i - 1]) else finite[0]
+    b = grid[i + 1] if interior and math.isfinite(grid[i + 1]) else finite[-1]
+    bracket = (a, b)
+
+    done = 0
+    if interior and b > a:
+        c = b - _INV_PHI * (b - a)
+        d = a + _INV_PHI * (b - a)
+        evaluate([c, d])                      # both points, one shared pass
+        for done in range(1, rounds + 1):
+            if memo[float(c)][2] >= memo[float(d)][2]:
+                b, d = d, c
+                c = b - _INV_PHI * (b - a)
+                evaluate([c])
+            else:
+                a, c = c, d
+                d = a + _INV_PHI * (b - a)
+                evaluate([d])
+
+    best = max(memo, key=lambda d: memo[d][2])
+    # polish: re-measure the winner with a longer series; its burned-in
+    # rows come straight from the service state cache
+    n_polish = int(polish_steps if polish_steps is not None
+                   else 2 * spec.n_steps)
+    resp = service.submit(probe_spec(best, n_polish), requester="refiner")
+    rec = {r.request_id: r for r in service.drain()}[resp.request_id]
+    rec = rec.result.records[0]
+    eff_star = float(efficiency(rec.u, rec.w))
+    evaluations.append((float(best), eff_star))
+    return RefinedWindow(
+        L=L, n_v=n_v, delta_star=float(best), eff_star=eff_star,
+        u_star=float(rec.u), w_star=float(rec.w), bracket=bracket,
+        evaluations=tuple(evaluations), rounds=done, interior=interior)

@@ -116,6 +116,29 @@ def _round_up(n: int, k: int) -> int:
     return -(-n // k) * k
 
 
+def spec_to_dict(spec: WindowSweep) -> dict:
+    """JSON-ready dict of a spec (``inf`` spelled as the string ``"inf"``).
+
+    The canonical on-disk/wire encoding shared by :meth:`SweepResult.to_json`
+    and the ``repro.service`` wire schema; inverted by :func:`spec_from_dict`.
+    """
+    d = dataclasses.asdict(spec)
+    d["Ls"] = [int(x) for x in spec.Ls]
+    d["n_vs"] = [int(x) for x in spec.n_vs]
+    d["deltas"] = ["inf" if math.isinf(x) else float(x) for x in spec.deltas]
+    return d
+
+
+def spec_from_dict(d: dict) -> WindowSweep:
+    """Rebuild a :class:`WindowSweep` from :func:`spec_to_dict` output."""
+    d = dict(d)
+    d["Ls"] = tuple(int(x) for x in d["Ls"])
+    d["n_vs"] = tuple(int(x) for x in d["n_vs"])
+    d["deltas"] = tuple(math.inf if x == "inf" else float(x)
+                        for x in d["deltas"])
+    return WindowSweep(**d)
+
+
 def _derive_dist(spec: WindowSweep):
     """The DistConfig ``PDESEngine`` would derive for this spec (same rule)."""
     from ..core.distributed import DistConfig
@@ -228,6 +251,13 @@ class SweepRecord:
             d["delta"] = "inf"
         return d
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "SweepRecord":
+        """Inverse of :meth:`as_dict` (decodes the ``"inf"`` spelling)."""
+        d = dict(d)
+        d["delta"] = math.inf if d["delta"] == "inf" else float(d["delta"])
+        return cls(**d)
+
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
@@ -250,18 +280,23 @@ class SweepResult:
             out.append(r)
         return out
 
+    def as_dict(self) -> dict:
+        """JSON-ready ``{"spec": ..., "records": [...]}`` encoding."""
+        return {"spec": spec_to_dict(self.spec),
+                "records": [r.as_dict() for r in self.records]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SweepResult":
+        """Inverse of :meth:`as_dict` — the wire-layer decode path."""
+        return cls(spec=spec_from_dict(d["spec"]),
+                   records=tuple(SweepRecord.from_dict(r)
+                                 for r in d["records"]))
+
     def to_json(self, path: str | pathlib.Path) -> pathlib.Path:
         """Write spec + records to ``path`` as JSON; returns the path."""
         path = pathlib.Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
-        spec = dataclasses.asdict(self.spec)
-        spec["Ls"] = list(spec["Ls"])
-        spec["n_vs"] = list(spec["n_vs"])
-        spec["deltas"] = ["inf" if math.isinf(d) else d
-                         for d in spec["deltas"]]
-        path.write_text(json.dumps(
-            {"spec": spec, "records": [r.as_dict() for r in self.records]},
-            indent=1))
+        path.write_text(json.dumps(self.as_dict(), indent=1))
         return path
 
 

@@ -76,12 +76,12 @@ def _kernel_bits(tau_in_ref, bits_ref, tau_ref, *stat_refs,
 
 def _kernel_counter(ctr_ref, tau_in_ref, *refs,
                     n_v: int, delta: float, rd_mode: bool, border_both: bool,
-                    block_b: int, has_delta_col: bool):
+                    block_b: int, has_delta_col: bool, has_trial_col: bool):
+    refs = list(refs)
     if has_delta_col:
-        delta_ref, tau_ref, *stat_refs = refs
-        delta = delta_ref[...]              # (b, 1) per-row window widths
-    else:
-        tau_ref, *stat_refs = refs
+        delta = refs.pop(0)[...]            # (b, 1) per-row window widths
+    trial_ref = refs.pop(0) if has_trial_col else None
+    tau_ref, *stat_refs = refs
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -92,8 +92,11 @@ def _kernel_counter(ctr_ref, tau_in_ref, *refs,
     b, L = tau.shape
     seed, step0, b0, l0 = (ctr_ref[0, i] for i in range(4))
     step = step0 + k.astype(jnp.uint32)
-    row0 = (pl.program_id(0) * block_b).astype(jnp.uint32)
-    bi = b0 + row0 + jax.lax.broadcasted_iota(jnp.uint32, (b, L), 0)
+    if has_trial_col:
+        bi = trial_ref[...]                 # (b, 1) per-row trial indices
+    else:
+        row0 = (pl.program_id(0) * block_b).astype(jnp.uint32)
+        bi = b0 + row0 + jax.lax.broadcasted_iota(jnp.uint32, (b, L), 0)
     li = l0 + jax.lax.broadcasted_iota(jnp.uint32, (b, L), 1)
     w0, w1 = counter_words(seed, step, bi, li)
     tau_next, moments = _fused_step(
@@ -167,6 +170,7 @@ def pdes_multistep_counter(
     tau: jax.Array,
     ctr: jax.Array,
     delta_col: jax.Array | None = None,
+    trial_col: jax.Array | None = None,
     *,
     k_steps: int,
     n_v: int,
@@ -190,6 +194,13 @@ def pdes_multistep_counter(
         its own Δ (``inf`` rows = unconstrained) and the static ``delta``
         is ignored.  This is how one kernel pass serves a whole window
         sweep — the Δ grid rides on the ensemble axis.
+      trial_col: optional (B, 1) uint32 per-row *global trial indices*.
+        When given, row r's event stream is keyed on ``trial_col[r]``
+        instead of ``b0 + r`` — the coalesced-batch operand of
+        ``repro.service``, letting one pass pack rows from many requests on
+        arbitrary (possibly duplicate) stream coordinates.  ``trial_col =
+        b0 + arange(B)`` with ``ctr`` b0 zeroed is bit-identical to the
+        scalar form.
       k_steps: number of fused steps (static).
 
     Returns: same as ``pdes_multistep``.
@@ -200,15 +211,20 @@ def pdes_multistep_counter(
     bb = pick_divisor_block(B, block_b)
     kern = functools.partial(_kernel_counter, n_v=n_v, delta=delta,
                              rd_mode=rd_mode, border_both=border_both,
-                             block_b=bb, has_delta_col=delta_col is not None)
+                             block_b=bb, has_delta_col=delta_col is not None,
+                             has_trial_col=trial_col is not None)
     in_specs = [
         pl.BlockSpec((1, 4), lambda i, k: (0, 0)),
         pl.BlockSpec((bb, L), lambda i, k: (i, 0)),
     ]
-    inputs = (ctr, tau)
+    inputs = [ctr, tau]
     if delta_col is not None:
         assert delta_col.shape == (B, 1), delta_col.shape
         in_specs.append(pl.BlockSpec((bb, 1), lambda i, k: (i, 0)))
-        inputs = (ctr, tau, delta_col.astype(tau.dtype))
-    return _call_multistep(kern, inputs, in_specs, B, L, k_steps, bb,
+        inputs.append(delta_col.astype(tau.dtype))
+    if trial_col is not None:
+        assert trial_col.shape == (B, 1), trial_col.shape
+        in_specs.append(pl.BlockSpec((bb, 1), lambda i, k: (i, 0)))
+        inputs.append(trial_col.astype(jnp.uint32))
+    return _call_multistep(kern, tuple(inputs), in_specs, B, L, k_steps, bb,
                            tau.dtype, interpret)

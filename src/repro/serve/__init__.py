@@ -1,2 +1,10 @@
-"""Serving: continuous batching engine with Δ-window lane synchronization."""
+"""Serving: continuous batching engine with Δ-window lane synchronization.
+
+Sibling of :mod:`repro.service` (the batched *sweep* front end): both
+reuse the paper's Eq. (3) as an admission rule via the shared
+:func:`repro.service.scheduler.window_admission` predicate — decode
+lanes here, requester fairness there, DP workers in
+``repro.distributed.delta_sync``.
+"""
+from ..service.scheduler import window_admission  # noqa: F401  (shared gate)
 from .engine import Request, Result, ServeEngine  # noqa: F401

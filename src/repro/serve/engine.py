@@ -9,6 +9,11 @@ measurement-phase memory bound.
 
 The engine is backend-agnostic: it drives any model exposing
 prefill/decode_step (models/model.py).
+
+The lane gate is ``DeltaScheduler.offer``, whose admission predicate is
+the shared :func:`repro.service.scheduler.window_admission` — the same
+Eq. (3) rule that throttles requesters in the batched sweep service
+(``repro.service``, the request/response sibling of this module).
 """
 from __future__ import annotations
 

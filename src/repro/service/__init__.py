@@ -1,0 +1,50 @@
+"""repro.service — batched sweep serving: many users, shared device passes.
+
+The ROADMAP's production layer: a request/response subsystem that accepts
+``WindowSweep`` specs from many requesters and multiplexes them into shared
+engine passes, packing each request's (trial, Δ) rows onto one ensemble/mesh
+batch exactly the way ``PDESEngine.init_sweep`` packs a single spec's Δ
+grid.  The contract is bit-identity: every response row equals a direct
+``run_window_sweep`` of that request's spec (tests/test_service.py).
+
+Modules:
+  ``api``          request/response core (``SweepService.submit``/``drain``)
+  ``scheduler``    compatibility keying, Δ-grid union packing, admission
+                   control + Eq. (3) requester fairness
+  ``state_cache``  row-granular LRU of burned-in states
+  ``wire``         versioned JSON schema + JSONL queue plumbing
+
+Run ``python -m repro.service queue.jsonl`` to drain a JSONL request queue
+end-to-end (see ``__main__``).
+
+Attribute access is lazy (PEP 562) so the CLI can configure ``XLA_FLAGS``
+(``--fake-devices``) before anything imports JAX.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "SweepService": "api", "SweepRequest": "api", "SweepResponse": "api",
+    "ServiceStats": "api", "canonicalize_spec": "api",
+    "spec_fingerprint": "api",
+    "BatchScheduler": "scheduler", "CompatKey": "scheduler",
+    "GridJob": "scheduler", "PackedPass": "scheduler",
+    "window_admission": "scheduler",
+    "StateCache": "state_cache",
+    "SCHEMA_VERSION": "wire", "encode_request": "wire",
+    "decode_request": "wire", "encode_response": "wire",
+    "decode_response": "wire",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

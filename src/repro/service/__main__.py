@@ -1,0 +1,94 @@
+"""``python -m repro.service`` — drain a JSONL sweep-request queue.
+
+Usage::
+
+    python -m repro.service queue.jsonl [--out responses.jsonl]
+        [--fake-devices N] [--mesh data=2,model=4]
+        [--max-batch-rows N] [--max-wait-rounds N] [--fairness-rows N]
+
+Each input line is a wire-schema request (see ``wire.py``); one response
+line is written per request, in submission order.  ``--fake-devices``
+forces an N-device CPU platform (for ``backend="sharded"`` requests on a
+development host) and therefore must be applied *before* JAX loads — which
+is why this module parses arguments before importing the service and the
+package ``__init__`` is lazy.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _parse_mesh(text: str) -> list[tuple[str, int]]:
+    out = []
+    for part in text.split(","):
+        name, _, size = part.partition("=")
+        if not size:
+            raise argparse.ArgumentTypeError(
+                f"mesh axis {part!r} is not name=size")
+        out.append((name.strip(), int(size)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.service",
+        description="Drain a JSONL window-sweep request queue.")
+    ap.add_argument("queue", help="JSONL file of wire-schema requests")
+    ap.add_argument("--out", default=None,
+                    help="responses JSONL path (default: stdout)")
+    ap.add_argument("--fake-devices", type=int, default=0, metavar="N",
+                    help="force an N-device CPU platform (sharded requests "
+                         "on a dev host); set before JAX imports")
+    ap.add_argument("--mesh", type=_parse_mesh, default=None,
+                    metavar="data=2,model=4",
+                    help="device mesh for backend='sharded' requests")
+    ap.add_argument("--max-batch-rows", type=int, default=4096)
+    ap.add_argument("--max-wait-rounds", type=int, default=0)
+    ap.add_argument("--fairness-rows", type=float, default=float("inf"))
+    args = ap.parse_args(argv)
+
+    if args.fake_devices:
+        flag = f"--xla_force_host_platform_device_count={args.fake_devices}"
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+
+    # deferred so --fake-devices lands before the first JAX import
+    from .api import SweepService
+    from .wire import serve_queue
+
+    mesh = None
+    if args.mesh:
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+        names = [n for n, _ in args.mesh]
+        sizes = [s for _, s in args.mesh]
+        n_dev = int(np.prod(sizes))
+        if len(jax.devices()) < n_dev:
+            print(f"error: mesh needs {n_dev} devices, have "
+                  f"{len(jax.devices())}", file=sys.stderr)
+            return 2
+        devs = np.asarray(jax.devices()[:n_dev]).reshape(sizes)
+        mesh = Mesh(devs, tuple(names))
+
+    service = SweepService(mesh=mesh,
+                           max_batch_rows=args.max_batch_rows,
+                           max_wait_rounds=args.max_wait_rounds,
+                           fairness_rows=args.fairness_rows)
+    if args.out:
+        with open(args.out, "w") as fh:
+            stats = serve_queue(args.queue, fh, service=service)
+    else:
+        stats = serve_queue(args.queue, sys.stdout, service=service)
+    print(f"served {stats.n_requests} request(s): "
+          f"{stats.n_deduped} deduped, {stats.n_passes} coalesced pass(es), "
+          f"{stats.rows_computed} rows computed, "
+          f"{stats.rows_from_state_cache} rows from state cache, "
+          f"{stats.engine_row_steps} engine row-steps", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,390 @@
+"""Request/response core of the sweep service.
+
+``SweepService`` accepts :class:`~repro.experiments.sweep.WindowSweep` specs
+from many requesters and returns :class:`~repro.experiments.sweep.
+SweepResult`\\ s, multiplexing compatible requests into shared device passes:
+
+* specs are **canonicalized** (tuple-normalized field by field) and
+  **fingerprinted**; identical specs dedup onto one computation and
+  request ids are deterministic functions of ``(requester, spec)``;
+* each (L, N_V) grid point becomes a :class:`~.scheduler.GridJob` whose
+  rows are the exact ``(trial, Δ)`` coordinates ``run_window_sweep`` would
+  use, so a coalesced pass can slice out, for every request, *bit-identical*
+  rows to a direct run of that request's spec (tau/offset/u/gvt exact —
+  the service's core contract, asserted in tests/test_service.py);
+* the packed pass feeds the engine the per-row ``deltas=`` column and the
+  per-row ``trial_base=`` vector (the PR's coalesced-batch engine operand),
+  on any backend including ``sharded`` (mesh padding per
+  ``plan_mesh_sweep`` conventions: Δ = inf pad rows on out-of-band stream
+  indices, sliced off before reduction);
+* burned-in states are cached row-granularly (:class:`~.state_cache.
+  StateCache`) and reused across requests and refinement rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+
+import numpy as np
+
+from ..core import measurement
+from ..core.engine import PDESEngine
+from ..core.horizon import PDESConfig, SimState, StepStats
+from ..experiments.sweep import (SweepRecord, SweepResult, WindowSweep,
+                                 _derive_dist, _round_up, plan_mesh_sweep,
+                                 spec_to_dict)
+from .scheduler import BatchScheduler, CompatKey, GridJob, PackedPass
+from .state_cache import StateCache
+
+__all__ = ["SweepRequest", "SweepResponse", "ServiceStats", "SweepService",
+           "canonicalize_spec", "spec_fingerprint"]
+
+
+def canonicalize_spec(spec: WindowSweep) -> WindowSweep:
+    """Field-normalized copy: tuples of python ints/floats, exact bools.
+
+    Two submissions describing the same study compare (and fingerprint)
+    equal after canonicalization regardless of whether they used lists,
+    numpy scalars, or ints-for-floats.
+    """
+    return dataclasses.replace(
+        spec,
+        Ls=tuple(int(x) for x in spec.Ls),
+        n_vs=tuple(int(x) for x in spec.n_vs),
+        deltas=tuple(float(x) for x in spec.deltas),
+        replicas=int(spec.replicas),
+        n_steps=int(spec.n_steps),
+        burn_in=None if spec.burn_in is None else int(spec.burn_in),
+        backend=str(spec.backend),
+        window=str(spec.window),
+        k_fuse=int(spec.k_fuse),
+        rd_mode=bool(spec.rd_mode),
+        border_both=bool(spec.border_both),
+        steady_frac=float(spec.steady_frac),
+        seed=int(spec.seed),
+    )
+
+
+def spec_fingerprint(spec: WindowSweep) -> str:
+    """Deterministic hex id of a canonicalized spec (the dedup key)."""
+    blob = json.dumps(spec_to_dict(canonicalize_spec(spec)), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRequest:
+    """One accepted submission.  ``request_id`` is deterministic:
+    ``sha256(requester, canonical spec)`` — resubmitting the same spec from
+    the same requester is idempotent."""
+
+    request_id: str
+    requester: str
+    spec: WindowSweep        # canonicalized
+    fingerprint: str         # canonical-spec hash (shared across requesters)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResponse:
+    """One served request.  ``cached`` marks results that required no new
+    rows (the spec fingerprint was already computed or in flight)."""
+
+    request_id: str
+    requester: str
+    spec: WindowSweep
+    result: SweepResult
+    cached: bool
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Work accounting — what the dedup/cache tests and the bench gate read.
+
+    ``engine_row_steps`` is the honest compute unit (rows × steps summed
+    over every engine call, burn and measure alike): coalescing, dedup and
+    the state cache all show up as this number shrinking versus the serial
+    per-request baseline.
+    """
+
+    n_requests: int = 0
+    n_deduped: int = 0            # served without creating any new jobs
+    n_passes: int = 0             # coalesced measurement passes executed
+    n_engine_calls: int = 0       # burn sub-passes + measurement passes
+    rows_requested: int = 0       # sum of request row counts (pre-dedup)
+    rows_computed: int = 0        # union rows measured on-device
+    rows_burned: int = 0          # rows burned on-device (state-cache misses)
+    rows_from_state_cache: int = 0
+    engine_row_steps: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _PendingRequest:
+    request: SweepRequest
+    cached: bool                  # True -> served from the result cache
+
+
+class SweepService:
+    """Batched request/response front end over the sweep engine.
+
+    Args:
+      mesh / dist: device mesh (required for ``backend="sharded"`` specs)
+        and optional ``DistConfig``.
+      max_batch_rows / max_wait_rounds / fairness_rows: admission control,
+        see :class:`~.scheduler.BatchScheduler`.
+      state_cache_rows: LRU bound of the burned-state cache, in rows.
+
+    ``submit`` registers a request; ``step`` runs one scheduling round;
+    ``drain`` forces everything through and returns responses in
+    submission order.
+    """
+
+    def __init__(self, *, mesh=None, dist=None, max_batch_rows: int = 4096,
+                 max_wait_rounds: int = 0, fairness_rows: float = math.inf,
+                 state_cache_rows: int = 65536):
+        self.mesh = mesh
+        self.dist = dist
+        self.scheduler = BatchScheduler(max_batch_rows=max_batch_rows,
+                                        max_wait_rounds=max_wait_rounds,
+                                        fairness_rows=fairness_rows)
+        self.state_cache = StateCache(max_rows=state_cache_rows)
+        self.stats = ServiceStats()
+        self._seq = 0
+        self._pending: dict[str, _PendingRequest] = {}   # rid -> request
+        self._order: list[str] = []                       # rids, FIFO
+        self._results: dict[str, SweepResult] = {}        # fp -> result
+        self._fp_specs: dict[str, WindowSweep] = {}       # fp -> spec
+        self._fp_jobs_left: dict[str, int] = {}           # fp -> undone jobs
+        self._fp_records: dict[str, dict] = {}            # fp -> {(L,nv): recs}
+        self._served_rows: dict[str, int] = {}            # requester -> rows
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, spec: WindowSweep, requester: str = "anon"
+               ) -> SweepRequest:
+        """Register a sweep request; returns its deterministic id."""
+        spec = canonicalize_spec(spec)
+        fp = spec_fingerprint(spec)
+        rid = hashlib.sha256(f"{requester}\n{fp}".encode()).hexdigest()[:16]
+        req = SweepRequest(request_id=rid, requester=requester, spec=spec,
+                           fingerprint=fp)
+        if rid in self._pending:          # idempotent resubmission
+            return self._pending[rid].request
+        self.stats.n_requests += 1
+        self.stats.rows_requested += (
+            len(spec.Ls) * len(spec.n_vs) * spec.n_trajectories)
+        cached = fp in self._results or fp in self._fp_jobs_left
+        if cached:
+            self.stats.n_deduped += 1
+        else:
+            self._enqueue_jobs(req)
+        self._pending[rid] = _PendingRequest(request=req, cached=cached)
+        self._order.append(rid)
+        return req
+
+    def _enqueue_jobs(self, req: SweepRequest) -> None:
+        spec = req.spec
+        self._fp_specs[req.fingerprint] = spec
+        self._fp_records[req.fingerprint] = {}
+        if spec.backend == "sharded":
+            if self.mesh is None:
+                raise ValueError(
+                    "backend='sharded' requests need a service mesh: "
+                    "construct SweepService(mesh=...)")
+            plans = plan_mesh_sweep(spec, self.mesh, self.dist)
+            points = [(p.L, p.n_v, p.trial_base, p.burn_in) for p in plans]
+        else:
+            points, base = [], 0
+            for L in spec.Ls:
+                for n_v in spec.n_vs:
+                    cfg = PDESConfig(L=int(L), n_v=int(n_v), delta=math.inf,
+                                     rd_mode=spec.rd_mode,
+                                     border_both=spec.border_both)
+                    points.append((int(L), int(n_v), base,
+                                   spec.burn_in_for(cfg)))
+                    base += spec.n_trajectories
+        self._fp_jobs_left[req.fingerprint] = len(points)
+        R = spec.replicas
+        for L, n_v, base, burn in points:
+            key = CompatKey(L=L, n_v=n_v, backend=spec.backend,
+                            window=spec.window, k_fuse=spec.k_fuse,
+                            rd_mode=spec.rd_mode,
+                            border_both=spec.border_both, seed=spec.seed,
+                            burn=burn, n_steps=spec.n_steps)
+            rows = tuple((base + w * R + r, d)
+                         for w, d in enumerate(spec.deltas)
+                         for r in range(R))
+            self.scheduler.enqueue(GridJob(
+                fp=req.fingerprint, requester=req.requester, seq=self._seq,
+                key=key, rows=rows, deltas=tuple(spec.deltas), replicas=R,
+                steady_frac=spec.steady_frac))
+            self._seq += 1
+
+    # -- scheduling / execution -------------------------------------------
+
+    def step(self, force: bool = False) -> int:
+        """One scheduling round; returns the number of passes executed."""
+        passes = self.scheduler.take(self._served_rows, force=force)
+        for p in passes:
+            self._execute(p)
+        return len(passes)
+
+    def drain(self) -> list[SweepResponse]:
+        """Force everything through; responses in submission order."""
+        while self.scheduler.n_pending:
+            self.step(force=True)
+        out = []
+        for rid in self._order:
+            pend = self._pending[rid]
+            fp = pend.request.fingerprint
+            out.append(SweepResponse(
+                request_id=rid, requester=pend.request.requester,
+                spec=pend.request.spec, result=self._results[fp],
+                cached=pend.cached))
+        self._pending.clear()
+        self._order.clear()
+        return out
+
+    # -- one coalesced pass -----------------------------------------------
+
+    def _engine(self, key: CompatKey) -> PDESEngine:
+        cfg = PDESConfig(L=key.L, n_v=key.n_v, delta=math.inf,
+                         rd_mode=key.rd_mode, border_both=key.border_both)
+        mesh = self.mesh if key.backend == "sharded" else None
+        return PDESEngine(cfg, backend=key.backend, window=key.window,
+                          k_fuse=key.k_fuse, mesh=mesh,
+                          dist=self.dist if mesh is not None else None)
+
+    def _ens_extent(self, key: CompatKey) -> int:
+        if key.backend != "sharded":
+            return 1
+        dist = self.dist
+        if dist is None:
+            spec_like = WindowSweep(window=key.window, k_fuse=key.k_fuse)
+            dist = _derive_dist(spec_like)
+        ens = 1
+        for a in dist.ens_axes:
+            ens *= self.mesh.shape[a]
+        return ens
+
+    def _execute(self, p: PackedPass) -> None:
+        import jax.numpy as jnp
+        key = p.key
+        eng = self._engine(key)
+        B = p.n_rows
+        ens = self._ens_extent(key)
+        n_pad = _round_up(B, ens) - B
+        trials = np.fromiter((t for t, _ in p.rows), np.int32, B)
+        deltas = np.fromiter((d for _, d in p.rows), np.float32, B)
+        if n_pad:
+            # pad rows run unconstrained on out-of-band stream indices and
+            # are sliced off before any reduction (plan_mesh_sweep contract)
+            trials = np.concatenate(
+                [trials, -1 - np.arange(n_pad, dtype=np.int32)])
+            deltas = np.concatenate(
+                [deltas, np.full(n_pad, np.inf, np.float32)])
+        drows = jnp.asarray(deltas)
+        tvec = jnp.asarray(trials)
+
+        state = self._burned_state(eng, key, p.rows, n_pad, drows, tvec)
+        _, stats = eng.run(state, key.seed, key.n_steps, deltas=drows,
+                           trial_base=tvec)
+        self.stats.n_passes += 1
+        self.stats.n_engine_calls += 1
+        self.stats.rows_computed += B
+        self.stats.engine_row_steps += (B + n_pad) * key.n_steps
+
+        arrs = StepStats(*(np.asarray(a)[:, :B] for a in stats))
+        for job, cols in zip(p.jobs, p.cols):
+            idx = np.asarray(cols, np.intp)
+            # fancy indexing yields F-ordered columns; numpy's axis-0 mean
+            # sums in a layout-dependent order, so restore C order to keep
+            # the reduction bit-identical to a direct run's (T, B) pass
+            sliced = StepStats(*(np.ascontiguousarray(a[:, idx])
+                                 for a in arrs))
+            red = measurement.sweep_reduce(
+                sliced, len(job.deltas), job.replicas,
+                steady_frac=job.steady_frac)
+            self._served_rows[job.requester] = (
+                self._served_rows.get(job.requester, 0) + len(job.rows))
+            self._finish_job(job, red)
+
+    def _burned_state(self, eng: PDESEngine, key: CompatKey, rows,
+                      n_pad: int, drows, tvec) -> SimState:
+        """Assemble the post-burn-in state, reusing cached rows.
+
+        Rows are independent rings, so cache-missing rows are burned in
+        their own sub-pass and spliced next to cached rows — bit-identical
+        to burning the whole batch (tests/test_service.py).
+        """
+        import jax.numpy as jnp
+        B = len(rows)
+        if not key.burn:
+            return eng.init(B + n_pad)
+        skey = key.stream_key
+        cached = [self.state_cache.get(skey + r) for r in rows]
+        missing = [i for i, c in enumerate(cached) if c is None]
+        self.stats.rows_from_state_cache += B - len(missing)
+        if missing:
+            ens = self._ens_extent(key)
+            m_pad = _round_up(len(missing), ens) - len(missing)
+            m_idx = np.asarray(missing, np.intp)
+            m_trials = np.concatenate(
+                [np.asarray(tvec)[m_idx],
+                 -1 - np.arange(m_pad, dtype=np.int32)])
+            m_deltas = np.concatenate(
+                [np.asarray(drows)[m_idx],
+                 np.full(m_pad, np.inf, np.float32)])
+            sub = eng.burn_in(eng.init(len(missing) + m_pad), key.seed,
+                              key.burn, deltas=jnp.asarray(m_deltas),
+                              trial_base=jnp.asarray(m_trials, jnp.int32))
+            self.stats.n_engine_calls += 1
+            self.stats.rows_burned += len(missing)
+            self.stats.engine_row_steps += (len(missing) + m_pad) * key.burn
+            self.state_cache.put_batch(
+                [skey + rows[i] for i in missing],
+                np.asarray(sub.tau)[:len(missing)],
+                np.asarray(sub.offset)[:len(missing)],
+                np.asarray(sub.offset_comp)[:len(missing)])
+            for j, i in enumerate(missing):
+                cached[i] = (np.asarray(sub.tau)[j],
+                             np.asarray(sub.offset)[j],
+                             np.asarray(sub.offset_comp)[j])
+        L = eng.cfg.L
+        tau = np.zeros((B + n_pad, L), np.float32)
+        off = np.zeros((B + n_pad,), np.float32)
+        comp = np.zeros((B + n_pad,), np.float32)
+        for i, (t, o, c) in enumerate(cached):
+            tau[i], off[i], comp[i] = t, o, c
+        return SimState(jnp.asarray(tau), jnp.asarray(off),
+                        jnp.asarray(comp), jnp.int32(key.burn))
+
+    # -- per-request assembly ---------------------------------------------
+
+    def _finish_job(self, job: GridJob, red: dict) -> None:
+        recs = []
+        for w, d in enumerate(job.deltas):
+            recs.append(SweepRecord(
+                L=job.key.L, n_v=job.key.n_v, delta=float(d),
+                u=float(red["u"][w]), u_err=float(red["u_err"][w]),
+                w2=float(red["w2"][w]), w2_err=float(red["w2_err"][w]),
+                w=float(red["w"][w]), wa=float(red["wa"][w]),
+                spread=float(red["spread"][w]),
+                rate=float(red["rate"][w]),
+                rate_err=float(red["rate_err"][w])))
+        self._fp_records[job.fp][(job.key.L, job.key.n_v)] = recs
+        self._fp_jobs_left[job.fp] -= 1
+        if self._fp_jobs_left[job.fp] == 0:
+            spec = self._fp_specs[job.fp]
+            records = []
+            for L in spec.Ls:
+                for n_v in spec.n_vs:
+                    records.extend(
+                        self._fp_records[job.fp][(int(L), int(n_v))])
+            self._results[job.fp] = SweepResult(spec=spec,
+                                                records=tuple(records))
+            del self._fp_jobs_left[job.fp]
+            del self._fp_records[job.fp]

@@ -1,0 +1,72 @@
+"""Burned-in-state cache: skip re-burning rows the service has seen before.
+
+The burn-in phase dominates a sweep's cost (hundreds to thousands of steps
+against a few hundred measured), and it is *deterministic*: a row's burned
+state is a pure function of ``(stream_key, trial, Δ)`` — the compat fields
+that pin the trajectory (``CompatKey.stream_key``, which includes the burn
+length) plus the row coordinate.  Because every ensemble row is an
+independent ring, rows can be burned in any grouping and reassembled
+freely, so the cache works at *row* granularity: a later pass burns only
+its cache-missing rows in a sub-pass and splices the rest in, bit-identical
+to burning everything from scratch (asserted in tests/test_service.py).
+
+Reuse shows up across requests (two users sweeping overlapping Δ grids) and
+across adaptive-refinement rounds (``experiments.optimal_window.
+refine_optimal_window`` re-measuring its bracket at a longer ``n_steps``).
+
+LRU-bounded in *rows* (one row holds an ``(L,)`` float32 ring + the Kahan
+offset pair), so the bound tracks actual memory: ``max_rows * (L + 2) * 4``
+bytes per ring size.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+__all__ = ["StateCache"]
+
+
+class StateCache:
+    """Row-granular LRU of burned-in states.
+
+    Keys are ``stream_key + (trial, delta)`` tuples (hashable); values are
+    ``(tau_row (L,), offset, offset_comp)`` float32 numpy copies — host
+    memory, detached from any device buffer.
+    """
+
+    def __init__(self, max_rows: int = 65536):
+        if max_rows < 1:
+            raise ValueError("max_rows must be >= 1")
+        self.max_rows = max_rows
+        self._rows: OrderedDict[tuple, tuple] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def get(self, key: tuple):
+        """The cached ``(tau_row, offset, comp)`` or None; refreshes LRU."""
+        try:
+            self._rows.move_to_end(key)
+        except KeyError:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return self._rows[key]
+
+    def put(self, key: tuple, tau_row, offset, comp) -> None:
+        self._rows[key] = (np.array(tau_row, np.float32, copy=True),
+                           np.float32(offset), np.float32(comp))
+        self._rows.move_to_end(key)
+        while len(self._rows) > self.max_rows:
+            self._rows.popitem(last=False)
+
+    def put_batch(self, keys, tau, offset, comp) -> None:
+        """Cache rows ``i -> keys[i]`` of a burned batch state."""
+        tau = np.asarray(tau)
+        offset = np.asarray(offset)
+        comp = np.asarray(comp)
+        for i, key in enumerate(keys):
+            self.put(key, tau[i], offset[i], comp[i])

