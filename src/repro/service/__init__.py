@@ -8,14 +8,19 @@ grid.  The contract is bit-identity: every response row equals a direct
 ``run_window_sweep`` of that request's spec (tests/test_service.py).
 
 Modules:
-  ``api``          request/response core (``SweepService.submit``/``drain``)
+  ``api``          request/response core (``SweepService.submit``/``drain``),
+                   streaming emission, capped-backoff engine retries
   ``scheduler``    compatibility keying, Δ-grid union packing, admission
-                   control + Eq. (3) requester fairness
-  ``state_cache``  row-granular LRU of burned-in states
-  ``wire``         versioned JSON schema + JSONL queue plumbing
+                   control + Eq. (3) requester fairness + per-round quotas
+  ``state_cache``  row-granular LRU of burned-in states, persistable
+                   across processes (``save``/``load``)
+  ``wire``         versioned JSON schema (v2: structured ``error``
+                   responses) + lazy, per-line-fault-tolerant JSONL intake
+  ``daemon``       long-running watch-directory serve loop (SIGTERM-clean)
 
 Run ``python -m repro.service queue.jsonl`` to drain a JSONL request queue
-end-to-end (see ``__main__``).
+end-to-end, or ``python -m repro.service serve --intake DIR`` for the
+daemon (see ``__main__``).
 
 Attribute access is lazy (PEP 562) so the CLI can configure ``XLA_FLAGS``
 (``--fake-devices``) before anything imports JAX.
@@ -29,10 +34,13 @@ _EXPORTS = {
     "BatchScheduler": "scheduler", "CompatKey": "scheduler",
     "GridJob": "scheduler", "PackedPass": "scheduler",
     "window_admission": "scheduler",
-    "StateCache": "state_cache",
-    "SCHEMA_VERSION": "wire", "encode_request": "wire",
-    "decode_request": "wire", "encode_response": "wire",
-    "decode_response": "wire",
+    "StateCache": "state_cache", "CACHE_FORMAT_VERSION": "state_cache",
+    "SCHEMA_VERSION": "wire", "SUPPORTED_VERSIONS": "wire",
+    "encode_request": "wire", "decode_request": "wire",
+    "encode_response": "wire", "decode_response": "wire",
+    "encode_error": "wire", "read_queue": "wire", "serve_queue": "wire",
+    "WireError": "wire", "QueueItem": "wire",
+    "DaemonConfig": "daemon", "serve_daemon": "daemon",
 }
 
 __all__ = sorted(_EXPORTS)

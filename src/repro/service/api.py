@@ -26,6 +26,7 @@ import dataclasses
 import hashlib
 import json
 import math
+import time
 
 import numpy as np
 
@@ -88,13 +89,20 @@ class SweepRequest:
 @dataclasses.dataclass(frozen=True)
 class SweepResponse:
     """One served request.  ``cached`` marks results that required no new
-    rows (the spec fingerprint was already computed or in flight)."""
+    rows (the spec fingerprint was already computed or in flight).
+
+    Exactly one of ``result``/``error`` is set: ``error`` (a structured
+    ``{"code", "message", ...}`` dict, wire schema v2) reports a request
+    whose device passes failed after the service's retry budget — the
+    failure is scoped to the request, never to the whole drain.
+    """
 
     request_id: str
     requester: str
-    spec: WindowSweep
-    result: SweepResult
+    spec: WindowSweep | None
+    result: SweepResult | None
     cached: bool
+    error: dict | None = None
 
 
 @dataclasses.dataclass
@@ -111,11 +119,16 @@ class ServiceStats:
     n_deduped: int = 0            # served without creating any new jobs
     n_passes: int = 0             # coalesced measurement passes executed
     n_engine_calls: int = 0       # burn sub-passes + measurement passes
+    n_errors: int = 0             # requests answered with an error response
+    n_retries: int = 0            # engine-pass retries (capped backoff)
     rows_requested: int = 0       # sum of request row counts (pre-dedup)
     rows_computed: int = 0        # union rows measured on-device
     rows_burned: int = 0          # rows burned on-device (state-cache misses)
     rows_from_state_cache: int = 0
     engine_row_steps: int = 0
+    state_cache_hits: int = 0     # mirrors StateCache counters (hit/miss/
+    state_cache_misses: int = 0   # eviction) so cache thrash under max_rows
+    state_cache_evictions: int = 0  # pressure is visible in every summary
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -133,25 +146,44 @@ class SweepService:
     Args:
       mesh / dist: device mesh (required for ``backend="sharded"`` specs)
         and optional ``DistConfig``.
-      max_batch_rows / max_wait_rounds / fairness_rows: admission control,
-        see :class:`~.scheduler.BatchScheduler`.
+      max_batch_rows / max_wait_rounds / fairness_rows / quota_rows:
+        admission control, see :class:`~.scheduler.BatchScheduler`
+        (``quota_rows`` caps any one requester's rows per scheduling round;
+        ``fairness_rows`` is the Eq. (3) window over cumulative served rows).
       state_cache_rows: LRU bound of the burned-state cache, in rows.
+      engine_retries / retry_base_s / retry_cap_s: a failing device pass is
+        retried up to ``engine_retries`` times with capped exponential
+        backoff (``min(retry_cap_s, retry_base_s * 2**attempt)``); a pass
+        that still fails is reported per-request as a structured ``engine``
+        error response — never by aborting the drain.
 
     ``submit`` registers a request; ``step`` runs one scheduling round;
     ``drain`` forces everything through and returns responses in
-    submission order.
+    submission order.  Setting ``on_response`` (a callable taking one
+    :class:`SweepResponse`) switches the service to streaming emission:
+    every response is delivered through the callback as soon as its result
+    (or error) is ready — after each individual pass, not at drain time —
+    which is what lets ``wire.serve_queue`` and the daemon flush completed
+    work to disk before later passes run (or crash).
     """
 
     def __init__(self, *, mesh=None, dist=None, max_batch_rows: int = 4096,
                  max_wait_rounds: int = 0, fairness_rows: float = math.inf,
-                 state_cache_rows: int = 65536):
+                 quota_rows: float = math.inf, state_cache_rows: int = 65536,
+                 engine_retries: int = 0, retry_base_s: float = 0.05,
+                 retry_cap_s: float = 2.0):
         self.mesh = mesh
         self.dist = dist
         self.scheduler = BatchScheduler(max_batch_rows=max_batch_rows,
                                         max_wait_rounds=max_wait_rounds,
-                                        fairness_rows=fairness_rows)
+                                        fairness_rows=fairness_rows,
+                                        quota_rows=quota_rows)
         self.state_cache = StateCache(max_rows=state_cache_rows)
         self.stats = ServiceStats()
+        self.engine_retries = engine_retries
+        self.retry_base_s = retry_base_s
+        self.retry_cap_s = retry_cap_s
+        self.on_response = None                           # streaming sink
         self._seq = 0
         self._pending: dict[str, _PendingRequest] = {}   # rid -> request
         self._order: list[str] = []                       # rids, FIFO
@@ -159,6 +191,7 @@ class SweepService:
         self._fp_specs: dict[str, WindowSweep] = {}       # fp -> spec
         self._fp_jobs_left: dict[str, int] = {}           # fp -> undone jobs
         self._fp_records: dict[str, dict] = {}            # fp -> {(L,nv): recs}
+        self._fp_errors: dict[str, dict] = {}             # fp -> error body
         self._served_rows: dict[str, int] = {}            # requester -> rows
 
     # -- request intake ----------------------------------------------------
@@ -180,6 +213,8 @@ class SweepService:
         if cached:
             self.stats.n_deduped += 1
         else:
+            # a fingerprint that previously *failed* is retried from scratch
+            self._fp_errors.pop(fp, None)
             self._enqueue_jobs(req)
         self._pending[rid] = _PendingRequest(request=req, cached=cached)
         self._order.append(rid)
@@ -226,27 +261,123 @@ class SweepService:
     # -- scheduling / execution -------------------------------------------
 
     def step(self, force: bool = False) -> int:
-        """One scheduling round; returns the number of passes executed."""
-        passes = self.scheduler.take(self._served_rows, force=force)
+        """One scheduling round; returns the number of passes executed.
+
+        Fairness sees only requesters with *pending* work: the Eq. (3) GVT
+        is the laggard among active tenants, so a requester who went idle
+        can never permanently block the window for everyone still queued.
+        """
+        active = self.scheduler.pending_requesters
+        served = {r: n for r, n in self._served_rows.items() if r in active}
+        passes = self.scheduler.take(served, force=force)
         for p in passes:
-            self._execute(p)
+            self._run_pass(p)
+        self._sync_cache_stats()
         return len(passes)
 
-    def drain(self) -> list[SweepResponse]:
-        """Force everything through; responses in submission order."""
-        while self.scheduler.n_pending:
-            self.step(force=True)
-        out = []
-        for rid in self._order:
-            pend = self._pending[rid]
-            fp = pend.request.fingerprint
-            out.append(SweepResponse(
+    def _run_pass(self, p: PackedPass) -> None:
+        """Execute one pass with capped-backoff retries; on final failure,
+        fail the pass's requests (structured ``engine`` error responses)
+        instead of propagating — one bad pass never poisons the drain."""
+        delay = self.retry_base_s
+        for attempt in range(self.engine_retries + 1):
+            try:
+                self._execute(p)
+                break
+            except Exception as exc:  # noqa: BLE001 — degraded, not dead
+                if attempt == self.engine_retries:
+                    self._fail_pass(p, exc)
+                    break
+                self.stats.n_retries += 1
+                time.sleep(min(delay, self.retry_cap_s))
+                delay *= 2
+        self.flush_ready()
+
+    def _fail_pass(self, p: PackedPass, exc: Exception) -> None:
+        body = {"code": "engine",
+                "message": f"{type(exc).__name__}: {exc}"}
+        fps = {job.fp for job in p.jobs}
+        for fp in fps:
+            self._fp_errors[fp] = body
+            self._fp_jobs_left.pop(fp, None)
+            self._fp_records.pop(fp, None)
+        # sibling grid-point jobs of a failed fingerprint are moot: drop
+        # them rather than compute rows nobody can be answered with
+        self.scheduler.drop_fps(fps)
+
+    @property
+    def n_unserved(self) -> int:
+        """Accepted requests not yet answered (streamed or drained)."""
+        return len(self._pending)
+
+    def _response_for(self, rid: str) -> SweepResponse | None:
+        """The finished response for ``rid``, or None if not ready."""
+        pend = self._pending[rid]
+        fp = pend.request.fingerprint
+        if fp in self._results:
+            return SweepResponse(
                 request_id=rid, requester=pend.request.requester,
                 spec=pend.request.spec, result=self._results[fp],
-                cached=pend.cached))
+                cached=pend.cached)
+        if fp in self._fp_errors:
+            return SweepResponse(
+                request_id=rid, requester=pend.request.requester,
+                spec=pend.request.spec, result=None, cached=False,
+                error=self._fp_errors[fp])
+        return None
+
+    def flush_ready(self) -> int:
+        """Deliver every finished response through ``on_response``.
+
+        No-op without a streaming sink.  Called after each executed pass,
+        so completed work reaches the sink (and its disk flush) before any
+        later pass runs — the mid-drain crash-tolerance mechanism.
+        """
+        if self.on_response is None:
+            return 0
+        emitted = 0
+        for rid in list(self._order):
+            if rid not in self._pending:
+                continue
+            resp = self._response_for(rid)
+            if resp is None:
+                continue
+            del self._pending[rid]
+            if resp.error is not None:
+                self.stats.n_errors += 1
+            self.on_response(resp)
+            emitted += 1
+        if emitted:
+            self._order = [r for r in self._order if r in self._pending]
+        return emitted
+
+    def drain(self) -> list[SweepResponse]:
+        """Force everything through; responses in submission order.
+
+        With a streaming ``on_response`` sink, responses already delivered
+        through the sink are not returned again.
+        """
+        while self.scheduler.n_pending:
+            self.step(force=True)
+        self.flush_ready()
+        out = []
+        for rid in self._order:
+            if rid not in self._pending:
+                continue
+            resp = self._response_for(rid)
+            assert resp is not None, f"drained with unserved request {rid}"
+            if resp.error is not None:
+                self.stats.n_errors += 1
+            out.append(resp)
         self._pending.clear()
         self._order.clear()
+        self._sync_cache_stats()
         return out
+
+    def _sync_cache_stats(self) -> None:
+        self.stats.state_cache_hits = self.state_cache.hits
+        self.stats.state_cache_misses = self.state_cache.misses
+        self.stats.state_cache_evictions = self.state_cache.evictions
 
     # -- one coalesced pass -----------------------------------------------
 
@@ -365,6 +496,8 @@ class SweepService:
     # -- per-request assembly ---------------------------------------------
 
     def _finish_job(self, job: GridJob, red: dict) -> None:
+        if job.fp in self._fp_errors:
+            return        # a sibling pass already failed this fingerprint
         recs = []
         for w, d in enumerate(job.deltas):
             recs.append(SweepRecord(

@@ -1,0 +1,212 @@
+"""Long-running daemon mode: fault-tolerant watch-directory serve loop.
+
+``serve_daemon`` turns the one-shot queue drain into a service that faces
+continuous traffic: clients drop wire-schema JSONL files into an intake
+directory, the daemon batches each round's arrivals through the
+``SweepService`` scheduler (coalescing, dedup, Eq. (3) fairness and the
+per-round tenant quota), and appends one response line per request to the
+output file as each result completes.
+
+The hardening contract, mirroring the paper's motivation for the moving
+window — bound the damage any one participant can cause:
+
+* **malformed intake degrades per-line**: a bad JSON line, an unsupported
+  schema version, or an oversized request gets a structured ``error``
+  response at intake time; every other line in the file is still served;
+* **engine failures degrade per-request**: a failing device pass is
+  retried with capped backoff inside the service and then reported as an
+  ``engine`` error response for exactly the requests it carried;
+* **quotas bound tenants**: ``quota_rows`` meters any one requester's rows
+  per round and ``fairness_rows`` applies Eq. (3) over cumulative served
+  rows (the laggard is the GVT), so a flooding requester cannot stall a
+  laggard beyond the fairness window;
+* **state survives restarts**: the burned-state cache is persisted (npz +
+  manifest, atomic rename) after every round that added rows, so a killed
+  daemon's successor resumes from the burn-in work already paid for —
+  responses stay bit-identical to an uninterrupted run;
+* **SIGTERM flushes**: on SIGTERM/SIGINT the loop stops intake, force-
+  drains every accepted request, flushes the responses, saves the cache,
+  and exits 0.
+
+Intake protocol: files matching ``*.jsonl`` in the intake directory are
+processed in sorted-name order and renamed to ``<name>.done`` afterwards
+(drop files via write-to-temp + rename to avoid partial reads).  A file
+whose processing was cut short by a crash keeps its name and is simply
+re-processed on restart — deterministic request ids and the result/state
+caches make re-processing idempotent.  Responses are appended to
+``out_path`` as they complete (not in intake order; correlate by
+``request_id``), flushed line by line.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import sys
+import time
+
+from .wire import (DEFAULT_MAX_LINE_BYTES, WireError, encode_error,
+                   encode_response, read_queue)
+
+__all__ = ["DaemonConfig", "serve_daemon"]
+
+
+@dataclasses.dataclass
+class DaemonConfig:
+    """Knobs of the serve loop (service-level knobs live on SweepService).
+
+    Attributes:
+      intake_dir: directory watched for ``*.jsonl`` request files.
+      out_path: responses JSONL, append-mode, flushed per line.
+      state_cache_path: persist the burned-state cache here (None = off).
+      poll_interval_s: sleep between idle rounds.
+      max_line_bytes: intake cap; longer lines get ``oversize`` errors.
+      max_files_per_round: intake meter — at most this many request files
+        are consumed per round (None = all available), bounding how long
+        early arrivals wait behind a deep backlog before their first pass.
+      idle_exit_rounds: exit cleanly after this many consecutive rounds
+        with no intake, no passes, and nothing pending (None = run until
+        signalled — the production mode).
+      max_rounds: hard round cap (None = unbounded); a backstop for tests.
+      crash_after_passes: fault injection for the crash/restart tests —
+        hard-exit (``os._exit(70)``) at the end of the first round in
+        which the service has executed at least this many passes, *after*
+        responses and state cache hit disk.  None = disabled.
+    """
+
+    intake_dir: str
+    out_path: str
+    state_cache_path: str | None = None
+    poll_interval_s: float = 0.25
+    max_line_bytes: int = DEFAULT_MAX_LINE_BYTES
+    max_files_per_round: int | None = None
+    idle_exit_rounds: int | None = None
+    max_rounds: int | None = None
+    crash_after_passes: int | None = None
+
+
+def _intake_files(cfg: DaemonConfig) -> list[str]:
+    out_abs = os.path.abspath(cfg.out_path)
+    names = []
+    for name in sorted(os.listdir(cfg.intake_dir)):
+        if not name.endswith(".jsonl"):
+            continue
+        path = os.path.join(cfg.intake_dir, name)
+        if os.path.abspath(path) == out_abs:
+            continue
+        names.append(path)
+    return names
+
+
+def serve_daemon(cfg: DaemonConfig, *, service=None, log=None) -> "ServiceStats":
+    """Run the watch-directory serve loop until signalled (or idle-exited).
+
+    Returns the final :class:`~.api.ServiceStats`.  ``service`` defaults to
+    a fresh :class:`~.api.SweepService`; pass one to set mesh / quota /
+    retry knobs.  ``log`` is a callable for one-line progress messages
+    (default: stderr).
+    """
+    from .api import ServiceStats, SweepService  # noqa: F401 (return type)
+    if service is None:
+        service = SweepService()
+    if log is None:
+        def log(msg):
+            print(f"[repro.service.daemon] {msg}", file=sys.stderr, flush=True)
+
+    os.makedirs(cfg.intake_dir, exist_ok=True)
+    if cfg.state_cache_path and os.path.exists(cfg.state_cache_path):
+        n = service.state_cache.load(cfg.state_cache_path)
+        log(f"state cache: restored {n} burned row(s) from "
+            f"{cfg.state_cache_path}" if n else
+            f"state cache: {cfg.state_cache_path} unusable or empty, "
+            f"starting cold")
+
+    stop = {"sig": None}
+
+    def _on_signal(signum, frame):
+        stop["sig"] = signum
+
+    old_handlers = {}
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            old_handlers[sig] = signal.signal(sig, _on_signal)
+        except ValueError:          # not the main thread: rely on the caller
+            pass
+
+    out_fh = open(cfg.out_path, "a")
+
+    def emit(obj: dict) -> None:
+        out_fh.write(json.dumps(obj) + "\n")
+        out_fh.flush()
+
+    service.on_response = lambda resp: emit(encode_response(resp))
+
+    def save_cache() -> None:
+        if cfg.state_cache_path and service.state_cache.dirty:
+            service.state_cache.save(cfg.state_cache_path)
+
+    rounds = idle = 0
+    try:
+        while stop["sig"] is None:
+            rounds += 1
+            n_files = 0
+            for path in _intake_files(cfg):
+                if stop["sig"] is not None:
+                    break           # stop intake immediately on signal
+                if cfg.max_files_per_round is not None \
+                        and n_files >= cfg.max_files_per_round:
+                    break
+                n_files += 1
+                for item in read_queue(path,
+                                       max_line_bytes=cfg.max_line_bytes):
+                    err = item.error
+                    if err is None:
+                        try:
+                            service.submit(item.spec,
+                                           requester=item.requester)
+                            continue
+                        except Exception as e:  # e.g. sharded spec, no mesh
+                            err = WireError(
+                                "reject", f"{type(e).__name__}: {e}",
+                                lineno=item.lineno, requester=item.requester)
+                    service.stats.n_errors += 1
+                    emit(encode_error(err))
+                os.replace(path, path + ".done")
+            service.flush_ready()   # dedup/result-cache hits: answer now
+            n_passes = service.step(force=False)
+            save_cache()
+            if cfg.crash_after_passes is not None and \
+                    service.stats.n_passes >= cfg.crash_after_passes:
+                out_fh.flush()
+                os.fsync(out_fh.fileno())
+                log(f"fault injection: crashing after "
+                    f"{service.stats.n_passes} pass(es)")
+                os._exit(70)
+            busy = n_files or n_passes or service.n_unserved \
+                or service.scheduler.n_pending
+            idle = 0 if busy else idle + 1
+            if cfg.idle_exit_rounds is not None \
+                    and idle >= cfg.idle_exit_rounds:
+                log(f"idle for {idle} round(s), exiting")
+                break
+            if cfg.max_rounds is not None and rounds >= cfg.max_rounds:
+                log(f"round cap {cfg.max_rounds} reached, exiting")
+                break
+            if not busy:
+                time.sleep(cfg.poll_interval_s)
+        if stop["sig"] is not None:
+            log(f"signal {stop['sig']}: flushing in-flight work")
+        # clean shutdown: everything accepted gets its response flushed
+        while service.n_unserved:
+            service.step(force=True)
+        save_cache()
+        s = service.stats
+        log(f"served {s.n_requests} request(s), {s.n_errors} error(s), "
+            f"{s.n_passes} pass(es), {s.rows_from_state_cache} rows from "
+            f"state cache over {rounds} round(s)")
+        return s
+    finally:
+        out_fh.close()
+        for sig, handler in old_handlers.items():
+            signal.signal(sig, handler)

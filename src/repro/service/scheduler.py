@@ -147,18 +147,31 @@ class BatchScheduler:
         released anyway (0 = release immediately).
       fairness_rows: the Δ of the requester-fairness window (Eq. (3) over
         served row counts); ``inf`` disables throttling.
+      quota_rows: per-requester row budget *per scheduling round* — the
+        tenant-layer Δ on top of the fairness window.  A requester whose
+        admitted rows this round would exceed the quota has their remaining
+        jobs deferred to later rounds (never rejected), so a flooding
+        tenant is metered to ``quota_rows`` rows/round while laggards keep
+        the fairness window's priority.  A single job larger than the quota
+        is still released when it is the requester's first job of the round
+        (quotas bound throughput, they must not deadlock a request).
+        ``inf`` disables metering.
     """
 
     def __init__(self, *, max_batch_rows: int = 4096,
                  max_wait_rounds: int = 0,
-                 fairness_rows: float = math.inf):
+                 fairness_rows: float = math.inf,
+                 quota_rows: float = math.inf):
         if max_batch_rows < 1:
             raise ValueError("max_batch_rows must be >= 1")
         if max_wait_rounds < 0:
             raise ValueError("max_wait_rounds must be >= 0")
+        if quota_rows < 1:
+            raise ValueError("quota_rows must be >= 1")
         self.max_batch_rows = max_batch_rows
         self.max_wait_rounds = max_wait_rounds
         self.fairness_rows = fairness_rows
+        self.quota_rows = quota_rows
         self._pending: list[GridJob] = []
         self._waited: dict[CompatKey, int] = {}
 
@@ -174,6 +187,23 @@ class BatchScheduler:
     def pending_union_rows(self, key: CompatKey) -> int:
         rows = {r for j in self._pending if j.key == key for r in j.rows}
         return len(rows)
+
+    @property
+    def pending_requesters(self) -> set:
+        """Requesters with at least one pending job (the active tenants)."""
+        return {j.requester for j in self._pending}
+
+    def drop_fps(self, fps) -> int:
+        """Discard pending jobs serving any of the given fingerprints.
+
+        Used when a fingerprint fails permanently: its sibling grid-point
+        jobs can no longer contribute to a response.  Returns the number of
+        jobs dropped.
+        """
+        fps = set(fps)
+        before = len(self._pending)
+        self._pending = [j for j in self._pending if j.fp not in fps]
+        return before - len(self._pending)
 
     # -- one scheduling round ---------------------------------------------
 
@@ -201,6 +231,7 @@ class BatchScheduler:
             by_key.setdefault(j.key, []).append(j)
 
         passes, released = [], []
+        round_rows: dict[str, int] = {}    # per-round quota ledger
         for key, jobs in by_key.items():
             if not force:
                 admitted = [j for j in jobs if self._admitted(j, served)]
@@ -214,9 +245,20 @@ class BatchScheduler:
             # fairness orders the pack: least-served requesters first
             jobs = sorted(jobs, key=lambda j: (served.get(j.requester, 0),
                                                j.seq))
+            if not force and not math.isinf(self.quota_rows):
+                jobs = [j for j in jobs if self._within_quota(j, round_rows)]
+                if not jobs:
+                    continue           # whole group deferred by quota
             passes.extend(_pack(key, jobs, self.max_batch_rows))
             released.extend(jobs)
             self._waited.pop(key, None)
         taken = set(id(j) for j in released)
         self._pending = [j for j in self._pending if id(j) not in taken]
         return passes
+
+    def _within_quota(self, job: GridJob, round_rows: dict) -> bool:
+        used = round_rows.get(job.requester, 0)
+        if used and used + len(job.rows) > self.quota_rows:
+            return False
+        round_rows[job.requester] = used + len(job.rows)
+        return True

@@ -1,0 +1,473 @@
+"""Failure-path tests for the hardened sweep service (PR 9).
+
+The hardening contract, exercised end to end:
+
+* **wire v2** — structured ``error`` responses round-trip, v1 documents
+  still decode, and intake (``read_queue``/``serve_queue``) degrades
+  per-line: one malformed / oversized / wrong-version line gets an error
+  response at its queue position, everything else is still served.
+* **streaming flush** — completed responses reach the output sink before
+  later passes run, so a mid-drain crash keeps finished work on disk.
+* **engine failures** — a failing device pass is retried with capped
+  backoff, then reported as a per-request ``engine`` error; other
+  requests are unaffected and the fingerprint retries from scratch on
+  resubmission.
+* **persistence** — the burned-state cache survives processes
+  (save/load round trip, corruption → cold start, version gating) and a
+  daemon killed mid-queue resumes from it with responses bit-identical
+  to direct runs (the PR's acceptance gate, run as real subprocesses).
+* **quotas** — a flooding requester is metered per round while the
+  fairness window keeps serving the laggard.
+* **SIGTERM** — the daemon flushes every accepted request and exits 0.
+"""
+import dataclasses
+import io
+import json
+import math
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.experiments import WindowSweep, run_window_sweep
+from repro.experiments.sweep import SweepRecord, SweepResult
+from repro.service import (CACHE_FORMAT_VERSION, BatchScheduler, CompatKey,
+                           GridJob, QueueItem, StateCache, SweepResponse,
+                           SweepService, WireError, canonicalize_spec,
+                           decode_response, encode_error, encode_request,
+                           encode_response, read_queue, serve_queue)
+from repro.service import state_cache as state_cache_mod
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the shared fast pass shape of the service tests (8 rows, tiny ring)
+COMMON = dict(Ls=(16,), n_vs=(2,), replicas=4, n_steps=32, burn_in=16,
+              backend="pallas_multistep", k_fuse=8)
+
+
+def _subproc_env():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    return env
+
+
+def _key(**kw) -> CompatKey:
+    base = dict(L=16, n_v=2, backend="reference", window="exact", k_fuse=8,
+                rd_mode=False, border_both=False, seed=0, burn=16, n_steps=32)
+    base.update(kw)
+    return CompatKey(**base)
+
+
+def _job(requester, seq, rows) -> GridJob:
+    deltas = tuple(dict.fromkeys(d for _, d in rows))
+    return GridJob(fp=f"fp-{requester}-{seq}", requester=requester, seq=seq,
+                   key=_key(), rows=tuple(rows), deltas=deltas,
+                   replicas=len(rows) // len(deltas), steady_frac=0.5)
+
+
+# ---------------------------------------------------------------------------
+# wire schema v2: structured errors, v1 back-compat
+# ---------------------------------------------------------------------------
+
+
+def test_wire_error_response_round_trip():
+    err = WireError("parse", "not valid JSON: boom", lineno=7,
+                    requester="alice")
+    obj = json.loads(json.dumps(encode_error(err)))
+    assert obj["request_id"] == "line-7"      # intake errors have no rid
+    resp = decode_response(obj)
+    assert resp.result is None and resp.spec is None
+    assert resp.error == {"code": "parse", "message": "not valid JSON: boom",
+                          "lineno": 7}
+    assert resp.requester == "alice"
+
+
+def test_wire_v1_documents_still_decode():
+    spec = canonicalize_spec(WindowSweep(deltas=(2.0, math.inf), **COMMON))
+    from repro.experiments.sweep import spec_to_dict
+    from repro.service import decode_request
+    v1_req = {"version": 1, "requester": "bob",
+              "spec": spec_to_dict(spec)}
+    spec2, who = decode_request(v1_req)
+    assert spec2 == spec and who == "bob"
+    rec = SweepRecord(L=16, n_v=2, delta=2.0, u=1.0, u_err=0.0, w2=1.0,
+                      w2_err=0.0, w=1.0, wa=1.0, spread=0.0, rate=0.5,
+                      rate_err=0.0)
+    resp = SweepResponse(request_id="ab12", requester="bob", spec=spec,
+                         result=SweepResult(spec=spec, records=(rec,)),
+                         cached=False)
+    v1_resp = {**encode_response(resp), "version": 1}   # v1 writer: no error
+    back = decode_response(v1_resp)
+    assert back.result.records == resp.result.records
+    with pytest.raises(ValueError, match="schema version"):
+        decode_response({**v1_resp, "version": 99})
+
+
+def test_read_queue_is_lazy_and_degrades_per_line(tmp_path):
+    good = json.dumps(encode_request(WindowSweep(deltas=(2.0,), **COMMON),
+                                     "alice"))
+    queue = tmp_path / "q.jsonl"
+    queue.write_text("\n".join([
+        good,                                    # 1: fine
+        "",                                      # 2: blank, skipped
+        "{not json",                             # 3: parse error
+        '{"version": 99, "spec": {}}',           # 4: version error
+        '{"version": 2, "spec": {"Ls": "nope"}}',  # 5: schema error
+        good,                                    # 6: fine again
+    ]) + "\n")
+    items = read_queue(queue)
+    assert iter(items) is items                  # a generator, not a list
+    items = list(items)
+    assert [i.lineno for i in items] == [1, 3, 4, 5, 6]
+    assert isinstance(items[0], QueueItem)
+    assert items[0].error is None and items[0].requester == "alice"
+    assert [i.error.code if i.error else None for i in items] == [
+        None, "parse", "version", "schema", None]
+
+    (only,) = [i for i in read_queue(queue, max_line_bytes=16)
+               if i.lineno == 1]
+    assert only.error.code == "oversize"
+
+
+def test_serve_queue_recovers_from_malformed_lines(tmp_path):
+    spec = WindowSweep(deltas=(2.0,), **COMMON)
+    good = json.dumps(encode_request(spec, "alice"))
+    queue = tmp_path / "q.jsonl"
+    queue.write_text("\n".join([
+        good, "{broken", '{"version": 99, "spec": {}}',
+        json.dumps(encode_request(spec, "bob")),
+    ]) + "\n")
+    out = io.StringIO()
+    stats = serve_queue(queue, out, service=SweepService())
+    lines = out.getvalue().strip().splitlines()
+    assert len(lines) == 4                       # one response per line
+    responses = [decode_response(json.loads(li)) for li in lines]
+    # errors sit at their queue positions; the drain still served the rest
+    assert [r.error["code"] if r.error else None for r in responses] == [
+        None, "parse", "version", None]
+    assert responses[3].cached                   # bob dedup'd onto alice
+    direct = run_window_sweep(spec)
+    assert responses[0].result.records == direct.records
+    assert responses[3].result.records == direct.records
+    assert stats.n_errors == 2 and stats.n_requests == 2
+
+
+def test_serve_queue_rejects_sharded_spec_without_mesh(tmp_path):
+    sharded = dataclasses.replace(WindowSweep(deltas=(2.0,), **COMMON),
+                                  backend="sharded")
+    queue = tmp_path / "q.jsonl"
+    queue.write_text(json.dumps(encode_request(sharded, "alice")) + "\n" +
+                     json.dumps(encode_request(
+                         WindowSweep(deltas=(2.0,), **COMMON), "bob")) + "\n")
+    out = io.StringIO()
+    serve_queue(queue, out, service=SweepService())   # mesh=None
+    bad, ok = [decode_response(json.loads(li))
+               for li in out.getvalue().strip().splitlines()]
+    assert bad.error["code"] == "reject" and "mesh" in bad.error["message"]
+    assert ok.error is None and ok.result is not None
+
+
+def test_serve_queue_streams_responses_between_passes(tmp_path):
+    """A finished response is flushed before the *next* pass runs — the
+    crash-tolerance mechanism: killing the drain between passes loses only
+    unfinished work."""
+    spec1 = WindowSweep(deltas=(2.0,), **COMMON)
+    spec2 = dataclasses.replace(spec1, n_steps=64)   # incompatible: 2 passes
+    queue = tmp_path / "q.jsonl"
+    queue.write_text(json.dumps(encode_request(spec1, "alice")) + "\n" +
+                     json.dumps(encode_request(spec2, "bob")) + "\n")
+    out = io.StringIO()
+    svc = SweepService()
+    flushed_before = []
+    orig = svc._execute
+
+    def spy(p):
+        flushed_before.append(out.getvalue().count("\n"))
+        orig(p)
+
+    svc._execute = spy
+    serve_queue(queue, out, service=svc)
+    # pass 1 starts with nothing written; pass 2 starts with alice on disk
+    assert flushed_before == [0, 1]
+    assert out.getvalue().count("\n") == 2
+
+
+# ---------------------------------------------------------------------------
+# engine failures: retried, then scoped to the request
+# ---------------------------------------------------------------------------
+
+
+def test_engine_failure_retried_then_reported_per_request():
+    good = WindowSweep(deltas=(2.0,), **COMMON)
+    bad = dataclasses.replace(good, n_steps=64)
+    svc = SweepService(engine_retries=2, retry_base_s=0.0)
+    orig = svc._execute
+
+    def flaky(p):
+        if p.key.n_steps == 64:
+            raise RuntimeError("device melted")
+        orig(p)
+
+    svc._execute = flaky
+    svc.submit(good, requester="alice")
+    svc.submit(bad, requester="bob")
+    r_alice, r_bob = svc.drain()
+    # alice is untouched by bob's failure — bit-identical to a direct run
+    assert r_alice.error is None
+    assert r_alice.result.records == run_window_sweep(good).records
+    assert r_bob.result is None and r_bob.error["code"] == "engine"
+    assert "device melted" in r_bob.error["message"]
+    assert svc.stats.n_retries == 2              # capped-backoff attempts
+    assert svc.stats.n_errors == 1
+
+    # a failed fingerprint retries from scratch on resubmission
+    svc._execute = orig
+    svc.submit(bad, requester="bob")
+    (r2,) = svc.drain()
+    assert r2.error is None
+    assert r2.result.records == run_window_sweep(bad).records
+
+
+# ---------------------------------------------------------------------------
+# per-round requester quotas on top of the Eq. (3) fairness window
+# ---------------------------------------------------------------------------
+
+
+def test_quota_meters_flooder_while_laggard_is_served_first():
+    sched = BatchScheduler(fairness_rows=4, quota_rows=4)
+    for i in range(8):                            # flooder: 16 rows queued
+        sched.enqueue(_job("flood", i, [(2 * i, 1.0), (2 * i + 1, 1.0)]))
+    sched.enqueue(_job("lag", 99, [(100, 1.0)]))  # laggard: 1 row
+    served, rounds = {}, []
+    while sched.n_pending:
+        active = sched.pending_requesters
+        view = {r: n for r, n in served.items() if r in active}
+        got = {}
+        for p in sched.take(view):
+            for j in p.jobs:
+                got[j.requester] = got.get(j.requester, 0) + len(j.rows)
+                served[j.requester] = served.get(j.requester, 0) + len(j.rows)
+        rounds.append(got)
+        assert len(rounds) < 32, "quota starved the queue (livelock)"
+    # the laggard is served in round 1, despite 8 queued flooder jobs ahead
+    assert rounds[0].get("lag") == 1
+    # the flooder never exceeds quota_rows per round and needs >= 4 rounds
+    assert all(g.get("flood", 0) <= 4 for g in rounds)
+    assert len(rounds) >= 4 and served == {"flood": 16, "lag": 1}
+
+
+def test_quota_never_deadlocks_an_oversized_first_job():
+    sched = BatchScheduler(quota_rows=1)
+    sched.enqueue(_job("a", 0, [(0, 1.0), (1, 1.0)]))   # 2 rows > quota
+    (p,) = sched.take()                 # still released: first of the round
+    assert p.n_rows == 2 and sched.n_pending == 0
+
+
+# ---------------------------------------------------------------------------
+# state-cache persistence: round trip, corruption tolerance, evictions
+# ---------------------------------------------------------------------------
+
+
+def _fill(cache):
+    keys = [("s", 8, False, 0, 2.0), ("s", 8, False, 1, math.inf),
+            ("t", 16, True, 0, 4.0)]
+    for i, k in enumerate(keys):
+        L = k[1]
+        cache.put(k, np.arange(L, dtype=np.float32) + i, float(i), 0.25 * i)
+    return keys
+
+
+def test_state_cache_save_load_round_trip(tmp_path):
+    cache = StateCache()
+    keys = _fill(cache)
+    assert cache.dirty
+    path = tmp_path / "cache.npz"
+    assert cache.save(str(path)) == 3
+    assert not cache.dirty
+
+    fresh = StateCache()
+    assert fresh.load(str(path)) == 3
+    for k in keys:
+        tau, off, comp = fresh.get(k)
+        tau0, off0, comp0 = cache.get(k)
+        assert np.array_equal(tau, tau0)        # mixed ring lengths, exact
+        assert off == off0 and comp == comp0    # inf Δ keys survive JSON
+    # live rows win over stale persisted rows on load
+    newer = StateCache()
+    newer.put(keys[0], np.full(8, 9.0, np.float32), 9.0, 9.0)
+    assert newer.load(str(path)) == 2           # only the 2 missing rows
+    assert newer.get(keys[0])[1] == np.float32(9.0)
+
+
+def test_state_cache_load_trims_to_bound_in_lru_order(tmp_path):
+    cache = StateCache()
+    keys = _fill(cache)                          # saved order = LRU order
+    path = tmp_path / "cache.npz"
+    cache.save(str(path))
+    small = StateCache(max_rows=2)
+    assert small.load(str(path)) == 3
+    assert len(small) == 2 and small.evictions == 1
+    assert small.get(keys[0]) is None            # coldest row evicted
+    assert small.get(keys[2]) is not None
+
+
+def test_state_cache_load_tolerates_corruption(tmp_path, monkeypatch):
+    cache = StateCache()
+    _fill(cache)
+    assert cache.load(str(tmp_path / "missing.npz")) == 0
+    garbage = tmp_path / "garbage.npz"
+    garbage.write_bytes(b"\x00not an npz archive")
+    assert cache.load(str(garbage)) == 0
+    assert len(cache) == 3                       # cache untouched either way
+
+    good = tmp_path / "good.npz"
+    cache.save(str(good))
+    monkeypatch.setattr(state_cache_mod, "CACHE_FORMAT_VERSION",
+                        CACHE_FORMAT_VERSION + 1)
+    assert StateCache().load(str(good)) == 0     # version gate: cold start
+
+
+def test_eviction_pressure_surfaces_in_service_stats():
+    spec = WindowSweep(deltas=(2.0, 4.0), **COMMON)      # 8 burned rows
+    svc = SweepService(state_cache_rows=4)
+    svc.submit(spec, requester="alice")
+    svc.drain()
+    assert svc.state_cache.evictions == 4
+    assert svc.stats.state_cache_evictions == 4
+    assert svc.stats.state_cache_misses == svc.state_cache.misses == 8
+    assert svc.stats.state_cache_hits == svc.state_cache.hits == 0
+
+
+def test_persisted_cache_restart_is_bit_identical(tmp_path):
+    """In-process restart gate: a second service loading the first's saved
+    cache serves a follow-up entirely from persisted burn-in, bit-identical
+    to a direct run (the daemon test below does the same across real
+    processes)."""
+    first = WindowSweep(deltas=(2.0, 4.0), **COMMON)
+    longer = dataclasses.replace(first, n_steps=64)
+    svc1 = SweepService()
+    svc1.submit(first, requester="alice")
+    svc1.drain()
+    path = tmp_path / "cache.npz"
+    assert svc1.state_cache.save(str(path)) == first.n_trajectories
+
+    svc2 = SweepService()
+    assert svc2.state_cache.load(str(path)) == first.n_trajectories
+    svc2.submit(longer, requester="alice")
+    (resp,) = svc2.drain()
+    assert svc2.stats.rows_from_state_cache == first.n_trajectories
+    assert svc2.stats.rows_burned == 0           # nothing re-burned
+    assert resp.result.records == run_window_sweep(longer).records
+
+
+# ---------------------------------------------------------------------------
+# daemon: crash/restart resume, SIGTERM flush (real subprocesses)
+# ---------------------------------------------------------------------------
+
+
+def _drop_request(intake, name, spec, requester):
+    tmp = os.path.join(intake, name + ".tmp")
+    with open(tmp, "w") as fh:
+        fh.write(json.dumps(encode_request(spec, requester)) + "\n")
+    os.replace(tmp, os.path.join(intake, name))   # the intake drop protocol
+
+
+def _daemon_args(intake, out, extra):
+    return [sys.executable, "-m", "repro.service", "serve",
+            "--intake", str(intake), "--out", str(out),
+            "--poll", "0.05"] + extra
+
+
+def test_daemon_crash_restart_resumes_from_persisted_cache(tmp_path):
+    """The PR's acceptance gate: kill the daemon mid-queue (fault injection
+    after pass 1 of 2), restart it on the persisted state cache, and the
+    full response set is bit-identical to direct runs."""
+    intake = tmp_path / "intake"
+    intake.mkdir()
+    out, cache = tmp_path / "responses.jsonl", tmp_path / "cache.npz"
+    first = WindowSweep(deltas=(2.0, 4.0), **COMMON)
+    longer = dataclasses.replace(first, n_steps=64)
+    _drop_request(str(intake), "a.jsonl", first, "alice")
+    _drop_request(str(intake), "b.jsonl", longer, "bob")
+    args = _daemon_args(intake, out, [
+        "--state-cache", str(cache), "--idle-exit-rounds", "2",
+        "--max-files-per-round", "1"])   # meter intake: one file per round
+
+    crash = subprocess.run(args + ["--crash-after-passes", "1"],
+                           capture_output=True, text=True,
+                           env=_subproc_env(), cwd=REPO)
+    assert crash.returncode == 70, crash.stderr[-4000:]
+    assert "fault injection" in crash.stderr
+    # pass 1's response and the state cache hit disk before the crash
+    assert len(out.read_text().strip().splitlines()) == 1
+    assert cache.exists()
+    assert (intake / "a.jsonl.done").exists()     # consumed pre-crash
+    assert (intake / "b.jsonl").exists()          # survives for the restart
+
+    restart = subprocess.run(args, capture_output=True, text=True,
+                             env=_subproc_env(), cwd=REPO)
+    assert restart.returncode == 0, restart.stderr[-4000:]
+    assert f"restored {first.n_trajectories} burned row(s)" in restart.stderr
+    assert f"{first.n_trajectories} rows from state cache" in restart.stderr
+
+    by_requester = {}
+    for line in out.read_text().strip().splitlines():
+        resp = decode_response(json.loads(line))
+        assert resp.error is None
+        by_requester[resp.requester] = resp
+    assert set(by_requester) == {"alice", "bob"}
+    for who, spec in (("alice", first), ("bob", longer)):
+        direct = run_window_sweep(spec)
+        assert by_requester[who].result.records == direct.records, who
+
+
+def test_daemon_sigterm_flushes_inflight_work(tmp_path):
+    """SIGTERM while the scheduler is still *holding* the request (a huge
+    ``max_wait_rounds``): the daemon force-drains, flushes the response,
+    and exits 0 instead of dropping accepted work."""
+    intake = tmp_path / "intake"
+    intake.mkdir()
+    out = tmp_path / "responses.jsonl"
+    spec = WindowSweep(deltas=(2.0,), **COMMON)
+    _drop_request(str(intake), "a.jsonl", spec, "alice")
+    args = _daemon_args(intake, out, ["--max-wait-rounds", "1000000000"])
+    proc = subprocess.Popen(args, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True,
+                            env=_subproc_env(), cwd=REPO)
+    try:
+        deadline = time.time() + 300
+        while not (intake / "a.jsonl.done").exists():   # accepted, held
+            assert proc.poll() is None, proc.communicate()[1][-4000:]
+            assert time.time() < deadline, "daemon never consumed intake"
+            time.sleep(0.05)
+        proc.send_signal(signal.SIGTERM)
+        _, stderr = proc.communicate(timeout=300)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate()
+    assert proc.returncode == 0, stderr[-4000:]
+    assert "flushing in-flight work" in stderr
+    (line,) = out.read_text().strip().splitlines()
+    resp = decode_response(json.loads(line))
+    assert resp.requester == "alice" and resp.error is None
+    assert resp.result.records == run_window_sweep(spec).records
+
+
+def test_fake_devices_fails_loudly_when_jax_already_imported():
+    script = ("import jax\n"
+              "import sys\n"
+              "from repro.service.__main__ import main\n"
+              "sys.exit(main(['queue.jsonl', '--fake-devices', '2']))\n")
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True,
+                         env=_subproc_env(), cwd=REPO)
+    assert out.returncode == 2
+    assert "--fake-devices" in out.stderr
+    assert "already" in out.stderr and "silently" in out.stderr
