@@ -36,7 +36,36 @@ import time
 
 import numpy as np
 
+from repro.obs.trace import TraceRecorder, set_tracer
+
 OUT = pathlib.Path("results/benchmarks")
+
+#: ambient span recorder, installed by ``main``.  Every bench JSON gets a
+#: ``phases_us`` burn/measure/reduce breakdown from the spans the library
+#: emits (``ensemble.steady_state``, ``sweep.run_window_sweep``); pass
+#: ``--trace FILE`` to also keep the full Chrome-trace JSON.  Gate ratios
+#: are computed exactly as before — the breakdown is payload-only.
+_TRACER: TraceRecorder | None = None
+_PHASE_MARK = {"n": 0}
+
+
+def _phase_breakdown() -> dict | None:
+    """Sum burn/measure/reduce span µs recorded since the previous call.
+
+    Each ``_emit`` consumes the spans its bench produced, so concurrent
+    phases never leak across records.  Subprocess benches (pdes_comm,
+    window_sweep_sharded) trace nothing here and simply carry no
+    breakdown.
+    """
+    if _TRACER is None:
+        return None
+    events = _TRACER.events[_PHASE_MARK["n"]:]
+    _PHASE_MARK["n"] += len(events)
+    out: dict[str, float] = {}
+    for ev in events:
+        if ev["name"] in ("burn", "measure", "reduce"):
+            out[ev["name"]] = out.get(ev["name"], 0.0) + ev["dur"]
+    return {k: round(v, 1) for k, v in out.items()} or None
 
 #: Every bench in this harness validates Pallas paths in interpret mode on
 #: CPU (the engine default); recorded in the metadata so a TPU baseline can
@@ -111,6 +140,9 @@ def _emit(name: str, us_per_call: float, derived: str, payload: dict,
     payload = dict(payload, name=name, us_per_call=us_per_call,
                    derived=derived, meta=machine_meta(),
                    analysis=analysis_verdict())
+    phases = _phase_breakdown()
+    if phases is not None:
+        payload["phases_us"] = phases
     if gate is not None:
         payload["gate"] = gate
     (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1))
@@ -888,8 +920,15 @@ def main(argv=None) -> None:
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed relative regression of the gate metric "
                          "(default 0.25)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="save the full Chrome-trace JSON of the run (the "
+                         "per-bench phases_us breakdown is recorded either "
+                         "way)")
     args = ap.parse_args(argv)
     _RUN_CONFIG.update(fast=args.fast, cli_backend=args.backend)
+    global _TRACER
+    _TRACER = TraceRecorder()
+    set_tracer(_TRACER)           # library burn/measure/reduce spans
     baselines = None
     if args.check is not None:
         baselines = load_baselines(args.check)
@@ -930,10 +969,12 @@ def main(argv=None) -> None:
         if args.backend and "backend" in inspect.signature(fn).parameters:
             kw["backend"] = args.backend
         try:
-            fn(**kw)
+            with _TRACER.span(f"bench:{n}", cat="bench"):
+                fn(**kw)
         except AssertionError as e:  # report, keep going
             failures.append((n, str(e)[:200]))
             print(f"{n},0,FAILED: {str(e)[:120]}")
+            _phase_breakdown()     # drop the failed bench's spans
             continue
         if baselines is not None and n in baselines:
             verdict = compare_to_baseline(n, baselines[n], args.tolerance)
@@ -941,6 +982,9 @@ def main(argv=None) -> None:
                 regressions.append(n)
             if verdict != "skipped":
                 gated += 1
+    if args.trace:
+        _TRACER.save(args.trace)
+        print(f"trace: {len(_TRACER)} span(s) -> {args.trace}")
     if failures:
         raise SystemExit(f"{len(failures)} benchmark claims failed: "
                          f"{[f[0] for f in failures]}")

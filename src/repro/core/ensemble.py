@@ -15,6 +15,17 @@ import numpy as np
 
 from . import horizon
 from .horizon import PDESConfig
+from ..obs.trace import span as _span
+
+
+def _sync_if_traced(sp, tree) -> None:
+    """Await device work inside a live span (honest phase attribution).
+
+    Inert when no ambient tracer is installed, so untraced runs keep
+    JAX's async dispatch; values are identical either way.
+    """
+    if sp is not None:
+        jax.block_until_ready(tree)
 
 
 @dataclasses.dataclass
@@ -70,22 +81,33 @@ def steady_state(
         burn_in_steps = default_burn_in(cfg)
     if measure_steps is None:
         measure_steps = max(200, burn_in_steps // 4)
+    point = {"L": cfg.L, "n_v": cfg.n_v, "rows": n_trials}
     if backend is None:
         key = jax.random.key(seed)
         k_burn, k_meas = jax.random.split(key)
         state = horizon.init_state(cfg, n_trials)
-        state = horizon.burn_in(state, k_burn, cfg, burn_in_steps)
+        with _span("burn", args=dict(point, steps=burn_in_steps)) as sp:
+            state = horizon.burn_in(state, k_burn, cfg, burn_in_steps)
+            _sync_if_traced(sp, state)
         g0 = np.asarray(state.offset)  # GVT at measurement start (tau rebased)
-        state, stats = horizon.run_mean(state, k_meas, cfg, measure_steps)
+        with _span("measure", args=dict(point, steps=measure_steps)) as sp:
+            state, stats = horizon.run_mean(state, k_meas, cfg,
+                                            measure_steps)
+            _sync_if_traced(sp, stats)
     else:
         from .engine import PDESEngine
         eng = PDESEngine(cfg, backend=backend, **(engine_opts or {}))
-        state = eng.burn_in(eng.init(n_trials), seed, burn_in_steps)
+        with _span("burn", args=dict(point, steps=burn_in_steps)) as sp:
+            state = eng.burn_in(eng.init(n_trials), seed, burn_in_steps)
+            _sync_if_traced(sp, state)
         g0 = np.asarray(state.offset) + np.asarray(state.tau).min(axis=-1)
-        state, stats = eng.run_mean(state, seed, measure_steps)
-    u = np.asarray(stats.utilization)
-    w2 = np.asarray(stats.w2)
-    g1 = np.asarray(state.offset) + np.asarray(state.tau).min(axis=-1)
+        with _span("measure", args=dict(point, steps=measure_steps)) as sp:
+            state, stats = eng.run_mean(state, seed, measure_steps)
+            _sync_if_traced(sp, stats)
+    with _span("reduce", args=point):
+        u = np.asarray(stats.utilization)
+        w2 = np.asarray(stats.w2)
+        g1 = np.asarray(state.offset) + np.asarray(state.tau).min(axis=-1)
     return SteadyState(
         cfg=cfg,
         n_trials=n_trials,
@@ -213,14 +235,17 @@ def width_evolution(
     Returns dict of numpy arrays with leading time axis.  ``backend`` routes
     through ``PDESEngine`` exactly as in ``steady_state``.
     """
-    if backend is None:
-        key = jax.random.key(seed)
-        state = horizon.init_state(cfg, n_trials)
-        _, stats = horizon.run(state, key, cfg, n_steps)
-    else:
-        from .engine import PDESEngine
-        eng = PDESEngine(cfg, backend=backend, **(engine_opts or {}))
-        _, stats = eng.run(eng.init(n_trials), seed, n_steps)
+    with _span("measure", args={"L": cfg.L, "n_v": cfg.n_v,
+                                "rows": n_trials, "steps": n_steps}) as sp:
+        if backend is None:
+            key = jax.random.key(seed)
+            state = horizon.init_state(cfg, n_trials)
+            _, stats = horizon.run(state, key, cfg, n_steps)
+        else:
+            from .engine import PDESEngine
+            eng = PDESEngine(cfg, backend=backend, **(engine_opts or {}))
+            _, stats = eng.run(eng.init(n_trials), seed, n_steps)
+        _sync_if_traced(sp, stats)
     w2 = np.asarray(stats.w2)
     return {
         "t": np.arange(1, n_steps + 1),

@@ -46,6 +46,21 @@ from ..core import measurement
 from ..core.engine import PDESEngine
 from ..core.ensemble import default_burn_in
 from ..core.horizon import PDESConfig
+from ..obs.trace import span as _span
+
+
+def _sync_if_traced(sp, tree) -> None:
+    """Block on async-dispatched device work, but only inside a live span.
+
+    Tracing wants honest phase attribution (the burn span should contain
+    the burn's device time, not leak it into whoever touches the arrays
+    next); untraced runs keep JAX's async dispatch exactly as before, so
+    telemetry-off timing and values are untouched.  Values are never
+    affected either way — blocking only awaits completion.
+    """
+    if sp is not None:
+        import jax
+        jax.block_until_ready(tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -355,14 +370,22 @@ def run_window_sweep(spec: WindowSweep, *, mesh=None, dist=None) -> SweepResult:
             eng = _engine(spec, cfg)
             state, drows = eng.init_sweep(spec.deltas, spec.replicas)
             burn = spec.burn_in_for(cfg)
+            point = {"L": cfg.L, "n_v": cfg.n_v,
+                     "rows": spec.n_trajectories}
             if burn:
-                state = eng.burn_in(state, spec.seed, burn, deltas=drows,
-                                    trial_base=grid_base)
-            _, stats = eng.run(state, spec.seed, spec.n_steps, deltas=drows,
-                               trial_base=grid_base)
-            red = measurement.sweep_reduce(
-                stats, spec.n_windows, spec.replicas,
-                steady_frac=spec.steady_frac)
+                with _span("burn", args=dict(point, steps=burn)) as sp:
+                    state = eng.burn_in(state, spec.seed, burn,
+                                        deltas=drows, trial_base=grid_base)
+                    _sync_if_traced(sp, state)
+            with _span("measure", args=dict(point,
+                                            steps=spec.n_steps)) as sp:
+                _, stats = eng.run(state, spec.seed, spec.n_steps,
+                                   deltas=drows, trial_base=grid_base)
+                _sync_if_traced(sp, stats)
+            with _span("reduce", args=point):
+                red = measurement.sweep_reduce(
+                    stats, spec.n_windows, spec.replicas,
+                    steady_frac=spec.steady_frac)
             records.extend(_grid_point_records(spec, cfg, red))
             grid_base += spec.n_trajectories
     return SweepResult(spec=spec, records=tuple(records))
@@ -389,16 +412,24 @@ def _run_window_sweep_sharded(spec: WindowSweep, mesh, dist) -> SweepResult:
             state = eng.init(plan.n_padded)
             drows = jnp.concatenate(
                 [drows, jnp.full((plan.n_pad,), jnp.inf, drows.dtype)])
+        point = {"L": plan.L, "n_v": plan.n_v, "rows": plan.n_rows,
+                 "n_pad": plan.n_pad}
         if plan.burn_in:
-            state = eng.burn_in(state, spec.seed, plan.burn_in, deltas=drows,
-                                trial_base=plan.trial_base)
-        _, stats = eng.run(state, spec.seed, spec.n_steps, deltas=drows,
-                           trial_base=plan.trial_base)
-        if plan.n_pad:
-            stats = jax.tree.map(lambda a: a[:, :plan.n_rows], stats)
-        red = measurement.sweep_reduce(
-            stats, spec.n_windows, spec.replicas,
-            steady_frac=spec.steady_frac)
+            with _span("burn", args=dict(point, steps=plan.burn_in)) as sp:
+                state = eng.burn_in(state, spec.seed, plan.burn_in,
+                                    deltas=drows,
+                                    trial_base=plan.trial_base)
+                _sync_if_traced(sp, state)
+        with _span("measure", args=dict(point, steps=spec.n_steps)) as sp:
+            _, stats = eng.run(state, spec.seed, spec.n_steps, deltas=drows,
+                               trial_base=plan.trial_base)
+            _sync_if_traced(sp, stats)
+        with _span("reduce", args=point):
+            if plan.n_pad:
+                stats = jax.tree.map(lambda a: a[:, :plan.n_rows], stats)
+            red = measurement.sweep_reduce(
+                stats, spec.n_windows, spec.replicas,
+                steady_frac=spec.steady_frac)
         records.extend(_grid_point_records(spec, cfg, red))
     return SweepResult(spec=spec, records=tuple(records))
 

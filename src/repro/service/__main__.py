@@ -6,6 +6,7 @@ One-shot drain (the original mode)::
         [--fake-devices N] [--mesh data=2,model=4] [--state-cache PATH]
         [--max-batch-rows N] [--max-wait-rounds N] [--fairness-rows N]
         [--quota-rows N] [--engine-retries N]
+        [--metrics-dir DIR] [--trace FILE]
 
 Each input line is a wire-schema request (see ``wire.py``); one response
 line is written per input line, in queue order, streamed/flushed as each
@@ -17,6 +18,15 @@ Daemon mode::
     python -m repro.service serve --intake DIR [--out responses.jsonl]
         [--state-cache PATH] [--poll 0.25] [--idle-exit-rounds N]
         [--max-line-bytes N] [...same service knobs as above...]
+        [--metrics-dir DIR] [--trace FILE]
+
+Both modes accept ``--metrics-dir`` (atomic ``metrics.json`` +
+``metrics.prom`` snapshots of the live registry: paper observables per
+pass, service health, daemon phase timing) and ``--trace`` (Chrome-trace
+JSON, one span per coalesced pass annotated with its CompatKey, row
+counts, and cache provenance).  Render/validate either with
+``python -m repro.obs summarize [--check]``.  Telemetry is strictly
+off-path: responses are bit-identical with or without these flags.
 
 Watches DIR for ``*.jsonl`` request files, serves continuously (arrivals
 batched per scheduler round, per-requester quotas on top of the Eq. (3)
@@ -72,6 +82,13 @@ def _add_service_args(ap: argparse.ArgumentParser) -> None:
                          "before the per-request error response")
     ap.add_argument("--state-cache-rows", type=int, default=65536,
                     help="LRU bound of the burned-state cache, in rows")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="write atomic metrics.json/metrics.prom snapshots "
+                         "here (live paper observables + service health; "
+                         "see repro.obs)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record a Chrome-trace/Perfetto JSON here (one "
+                         "span per coalesced pass, CompatKey-annotated)")
 
 
 def _apply_fake_devices(args) -> int:
@@ -108,7 +125,15 @@ def _build_mesh(args):
     return Mesh(devs, tuple(names))
 
 
-def _build_service(args):
+def _build_telemetry(args):
+    """A ``repro.obs.Telemetry`` bundle when either flag asks for one."""
+    if not (args.metrics_dir or args.trace):
+        return None
+    from ..obs import Telemetry, TraceRecorder
+    return Telemetry(tracer=TraceRecorder() if args.trace else None)
+
+
+def _build_service(args, telemetry=None):
     from .api import SweepService
     mesh = _build_mesh(args)
     if isinstance(mesh, str):
@@ -120,7 +145,8 @@ def _build_service(args):
                         fairness_rows=args.fairness_rows,
                         quota_rows=args.quota_rows,
                         engine_retries=args.engine_retries,
-                        state_cache_rows=args.state_cache_rows)
+                        state_cache_rows=args.state_cache_rows,
+                        telemetry=telemetry)
 
 
 def _summary(stats) -> str:
@@ -152,11 +178,15 @@ def _main_drain(argv) -> int:
     # deferred so --fake-devices lands before the first JAX import
     from .wire import serve_queue
 
-    service = _build_service(args)
+    tel = _build_telemetry(args)
+    service = _build_service(args, telemetry=tel)
     if service is None:
         return 2
     if args.state_cache and os.path.exists(args.state_cache):
         service.state_cache.load(args.state_cache)
+    if tel is not None and tel.tracer is not None:
+        from ..obs import set_tracer
+        set_tracer(tel.tracer)     # library-level spans join the trace
     if args.out:
         with open(args.out, "w") as fh:
             stats = serve_queue(args.queue, fh, service=service)
@@ -164,6 +194,12 @@ def _main_drain(argv) -> int:
         stats = serve_queue(args.queue, sys.stdout, service=service)
     if args.state_cache and service.state_cache.dirty:
         service.state_cache.save(args.state_cache)
+    if tel is not None:
+        if args.metrics_dir:
+            from ..obs import write_snapshot
+            write_snapshot(tel.registry, args.metrics_dir)
+        if args.trace:
+            tel.tracer.save(args.trace)
     print(_summary(stats), file=sys.stderr)
     return 0
 
@@ -203,9 +239,13 @@ def _main_serve(argv) -> int:
     from .daemon import DaemonConfig, serve_daemon
     from .wire import DEFAULT_MAX_LINE_BYTES
 
-    service = _build_service(args)
+    tel = _build_telemetry(args)
+    service = _build_service(args, telemetry=tel)
     if service is None:
         return 2
+    if tel is not None and tel.tracer is not None:
+        from ..obs import set_tracer
+        set_tracer(tel.tracer)     # library-level spans join the trace
     cfg = DaemonConfig(
         intake_dir=args.intake, out_path=args.out,
         state_cache_path=args.state_cache,
@@ -215,7 +255,9 @@ def _main_serve(argv) -> int:
         max_files_per_round=args.max_files_per_round,
         idle_exit_rounds=args.idle_exit_rounds,
         max_rounds=args.max_rounds,
-        crash_after_passes=args.crash_after_passes)
+        crash_after_passes=args.crash_after_passes,
+        metrics_dir=args.metrics_dir,
+        trace_path=args.trace)
     stats = serve_daemon(cfg, service=service)
     print(_summary(stats), file=sys.stderr)
     return 0

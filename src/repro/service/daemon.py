@@ -45,7 +45,10 @@ import os
 import signal
 import sys
 import time
+from contextlib import nullcontext
 
+from ..obs import Telemetry, write_snapshot
+from ..obs.trace import TraceRecorder
 from .wire import (DEFAULT_MAX_LINE_BYTES, WireError, encode_error,
                    encode_response, read_queue)
 
@@ -73,6 +76,14 @@ class DaemonConfig:
         hard-exit (``os._exit(70)``) at the end of the first round in
         which the service has executed at least this many passes, *after*
         responses and state cache hit disk.  None = disabled.
+      metrics_dir: live exposition — after every busy round (and at exit)
+        the telemetry registry is snapshotted into ``metrics.json`` +
+        ``metrics.prom`` here, atomically (tmp+rename, the
+        ``StateCache.save`` discipline), so a scraper never reads a torn
+        file.  None = no exposition.
+      trace_path: record a span per round and per coalesced pass and save
+        the Chrome-trace JSON here at exit (including right before a
+        ``crash_after_passes`` hard exit).  None = no tracing.
     """
 
     intake_dir: str
@@ -84,6 +95,8 @@ class DaemonConfig:
     idle_exit_rounds: int | None = None
     max_rounds: int | None = None
     crash_after_passes: int | None = None
+    metrics_dir: str | None = None
+    trace_path: str | None = None
 
 
 def _intake_files(cfg: DaemonConfig) -> list[str]:
@@ -113,6 +126,32 @@ def serve_daemon(cfg: DaemonConfig, *, service=None, log=None) -> "ServiceStats"
     if log is None:
         def log(msg):
             print(f"[repro.service.daemon] {msg}", file=sys.stderr, flush=True)
+
+    # telemetry: reuse the service's bundle if it has one; otherwise build
+    # whatever the exposition config needs (registry always, tracer only
+    # when a trace is requested)
+    tel = service.telemetry
+    if tel is None and (cfg.metrics_dir or cfg.trace_path):
+        tel = Telemetry(tracer=TraceRecorder() if cfg.trace_path else None)
+        service.attach_telemetry(tel)
+    elif tel is not None and cfg.trace_path and tel.tracer is None:
+        tel.tracer = TraceRecorder()
+    if tel is not None:
+        rounds_total = tel.registry.counter(
+            "repro_daemon_rounds", "serve-loop rounds completed")
+        phase_seconds = tel.registry.histogram(
+            "repro_daemon_phase_seconds",
+            "daemon round phases: intake, flush, save "
+            "(schedule/engine live in repro_service_phase_seconds)",
+            unit="s")
+
+    def save_metrics() -> None:
+        if tel is not None and cfg.metrics_dir:
+            write_snapshot(tel.registry, cfg.metrics_dir)
+
+    def save_trace() -> None:
+        if tel is not None and tel.tracer is not None and cfg.trace_path:
+            tel.tracer.save(cfg.trace_path)
 
     os.makedirs(cfg.intake_dir, exist_ok=True)
     if cfg.state_cache_path and os.path.exists(cfg.state_cache_path):
@@ -150,41 +189,75 @@ def serve_daemon(cfg: DaemonConfig, *, service=None, log=None) -> "ServiceStats"
     try:
         while stop["sig"] is None:
             rounds += 1
-            n_files = 0
-            for path in _intake_files(cfg):
-                if stop["sig"] is not None:
-                    break           # stop intake immediately on signal
-                if cfg.max_files_per_round is not None \
-                        and n_files >= cfg.max_files_per_round:
-                    break
-                n_files += 1
-                for item in read_queue(path,
-                                       max_line_bytes=cfg.max_line_bytes):
-                    err = item.error
-                    if err is None:
-                        try:
-                            service.submit(item.spec,
-                                           requester=item.requester)
-                            continue
-                        except Exception as e:  # e.g. sharded spec, no mesh
-                            err = WireError(
-                                "reject", f"{type(e).__name__}: {e}",
-                                lineno=item.lineno, requester=item.requester)
-                    service.stats.n_errors += 1
-                    emit(encode_error(err))
-                os.replace(path, path + ".done")
-            service.flush_ready()   # dedup/result-cache hits: answer now
-            n_passes = service.step(force=False)
-            save_cache()
+            prev = service.stats.snapshot()
+            rspan = (tel.spans("round", cat="daemon",
+                               args={"round": rounds})
+                     if tel is not None else nullcontext())
+            with rspan as sp:
+                t0 = time.perf_counter()
+                n_files = 0
+                for path in _intake_files(cfg):
+                    if stop["sig"] is not None:
+                        break       # stop intake immediately on signal
+                    if cfg.max_files_per_round is not None \
+                            and n_files >= cfg.max_files_per_round:
+                        break
+                    n_files += 1
+                    for item in read_queue(
+                            path, max_line_bytes=cfg.max_line_bytes):
+                        err = item.error
+                        if err is None:
+                            try:
+                                service.submit(item.spec,
+                                               requester=item.requester)
+                                continue
+                            except Exception as e:  # e.g. no service mesh
+                                err = WireError(
+                                    "reject", f"{type(e).__name__}: {e}",
+                                    lineno=item.lineno,
+                                    requester=item.requester)
+                        service.stats.n_errors += 1
+                        emit(encode_error(err))
+                    os.replace(path, path + ".done")
+                if tel is not None:
+                    phase_seconds.observe(time.perf_counter() - t0,
+                                          phase="intake")
+                t0 = time.perf_counter()
+                service.flush_ready()  # dedup/result hits: answer now
+                if tel is not None:
+                    phase_seconds.observe(time.perf_counter() - t0,
+                                          phase="flush")
+                n_passes = service.step(force=False)
+                t0 = time.perf_counter()
+                save_cache()
+                if tel is not None:
+                    phase_seconds.observe(time.perf_counter() - t0,
+                                          phase="save")
+                if sp is not None:
+                    sp.args.update(n_files=n_files, n_passes=n_passes)
+            busy = n_files or n_passes or service.n_unserved \
+                or service.scheduler.n_pending
+            if tel is not None:
+                rounds_total.inc()
+            if busy:
+                # per-round *rates* (stats.diff vs the round-start
+                # snapshot), not the ever-growing lifetime totals
+                d = service.stats.diff(prev)
+                log(f"round {rounds}: +{d.n_requests} request(s) "
+                    f"(+{d.n_deduped} dedup), {n_passes} pass(es), "
+                    f"+{d.rows_computed} rows computed, "
+                    f"+{d.rows_from_state_cache} from state cache, "
+                    f"+{d.n_errors} error(s)")
+                save_metrics()
             if cfg.crash_after_passes is not None and \
                     service.stats.n_passes >= cfg.crash_after_passes:
                 out_fh.flush()
                 os.fsync(out_fh.fileno())
+                save_metrics()
+                save_trace()
                 log(f"fault injection: crashing after "
                     f"{service.stats.n_passes} pass(es)")
                 os._exit(70)
-            busy = n_files or n_passes or service.n_unserved \
-                or service.scheduler.n_pending
             idle = 0 if busy else idle + 1
             if cfg.idle_exit_rounds is not None \
                     and idle >= cfg.idle_exit_rounds:
@@ -201,6 +274,8 @@ def serve_daemon(cfg: DaemonConfig, *, service=None, log=None) -> "ServiceStats"
         while service.n_unserved:
             service.step(force=True)
         save_cache()
+        save_metrics()
+        save_trace()
         s = service.stats
         log(f"served {s.n_requests} request(s), {s.n_errors} error(s), "
             f"{s.n_passes} pass(es), {s.rows_from_state_cache} rows from "

@@ -172,6 +172,10 @@ class BatchScheduler:
         self.max_wait_rounds = max_wait_rounds
         self.fairness_rows = fairness_rows
         self.quota_rows = quota_rows
+        # lifetime throttle ledgers (jobs deferred, not rejected) — read by
+        # the telemetry layer as repro_service_{fairness,quota}_throttles
+        self.fairness_deferrals = 0
+        self.quota_deferrals = 0
         self._pending: list[GridJob] = []
         self._waited: dict[CompatKey, int] = {}
 
@@ -235,6 +239,7 @@ class BatchScheduler:
         for key, jobs in by_key.items():
             if not force:
                 admitted = [j for j in jobs if self._admitted(j, served)]
+                self.fairness_deferrals += len(jobs) - len(admitted)
                 waited = self._waited.get(key, 0)
                 full = self.pending_union_rows(key) >= self.max_batch_rows
                 if not admitted or (waited < self.max_wait_rounds
@@ -246,7 +251,9 @@ class BatchScheduler:
             jobs = sorted(jobs, key=lambda j: (served.get(j.requester, 0),
                                                j.seq))
             if not force and not math.isinf(self.quota_rows):
-                jobs = [j for j in jobs if self._within_quota(j, round_rows)]
+                kept = [j for j in jobs if self._within_quota(j, round_rows)]
+                self.quota_deferrals += len(jobs) - len(kept)
+                jobs = kept
                 if not jobs:
                     continue           # whole group deferred by quota
             passes.extend(_pack(key, jobs, self.max_batch_rows))

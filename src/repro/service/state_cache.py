@@ -57,6 +57,9 @@ class StateCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.saves = 0              # successful save() calls
+        self.loads = 0              # load() calls that restored >= 1 row
+        self.restored_rows = 0      # rows brought back across processes
         self.dirty = False          # rows added since the last save/load
 
     def __len__(self) -> int:
@@ -127,6 +130,7 @@ class StateCache:
             os.fsync(fh.fileno())
         os.replace(tmp, path)
         self.dirty = False
+        self.saves += 1
         return len(self._rows)
 
     def load(self, path) -> int:
@@ -175,4 +179,7 @@ class StateCache:
         while len(self._rows) > self.max_rows:
             self._rows.popitem(last=False)
             self.evictions += 1
+        if n:
+            self.loads += 1
+            self.restored_rows += n
         return n
